@@ -1,0 +1,64 @@
+"""LM micro-bench: wall-time of reduced-config train/prefill/decode steps.
+
+Complements the dry-run (which measures the compiled artifact, not wall
+time): on this CPU host we time the REDUCED configs end to end, proving
+the full step path executes, and report us/token per family.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config, reduce_config
+from repro.configs.base import ShapeSpec
+from repro.models.model import build, input_specs
+from repro.optim import adamw, compression
+from repro.sharding import Policy
+from repro.steps import make_train_step
+
+SHAPE = ShapeSpec("bench", "train", 64, 4)
+
+
+def bench_arch(arch: str) -> dict:
+    cfg = reduce_config(get_config(arch))
+    step = make_train_step(cfg, SHAPE, None, microbatches=2)
+    model = build(cfg)
+    params = model.init(jax.random.key(0)) if cfg.family != "encdec" else \
+        model.init(jax.random.key(0), 128)
+    state = {"params": params, "opt": adamw.init(params),
+             "ef": compression.init_error_feedback(params)}
+    rng = np.random.default_rng(0)
+    batch = {}
+    for k, v in input_specs(cfg, SHAPE, concrete=True).items():
+        if v.dtype == jnp.int32:
+            batch[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab, v.shape), jnp.int32)
+        else:
+            batch[k] = jnp.asarray(rng.normal(size=v.shape) * 0.02, v.dtype)
+    fn = jax.jit(step.fn)
+    state, m = fn(state, batch)          # compile
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    reps = 3
+    for _ in range(reps):
+        state, m = fn(state, batch)
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / reps
+    return {"arch": arch, "family": cfg.family,
+            "us_per_token": dt / SHAPE.tokens * 1e6,
+            "loss_finite": bool(jnp.isfinite(m["loss"]))}
+
+
+def main():
+    print("arch,family,us_per_token,loss_finite")
+    for arch in ARCHS:
+        r = bench_arch(arch)
+        print(f"{r['arch']},{r['family']},{r['us_per_token']:.1f},"
+              f"{r['loss_finite']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark harness entrypoint: one section per paper table + LM bench.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Sections:
+  [tm_speedup]  paper Tables 1–3 analogue — indexed vs exhaustive TM
+                throughput + the §3 work-ratio validation (0.02 / 0.006)
+  [work_ratio]  hardware-independent reproduction of the paper's Remarks
+  [lm_step]     reduced-config LM step wall-times (all 10 archs)
+
+Roofline numbers (dry-run-derived, not wall-time) live in results/ and
+EXPERIMENTS.md; regenerate with launch/roofline_sweep.py.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full grids (slow on 1 CPU core)")
+    ap.add_argument("--skip-lm", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    # --- paper tables: TM speedup grid -----------------------------------
+    from benchmarks import tm_speedup
+    rows = tm_speedup.run(fast=not args.full)
+    for r in rows:
+        base = f"tm/{r['family']}/o{r['features']}/c{r['clauses']}"
+        print(f"{base}/infer_dense,{r['infer_dense_us']:.2f},")
+        print(f"{base}/infer_indexed,{r['infer_indexed_us']:.2f},"
+              f"speedup={r['infer_speedup_indexed']:.2f}")
+        print(f"{base}/infer_compact,{r['infer_compact_us']:.2f},"
+              f"speedup={r['infer_speedup_compact']:.2f}")
+        print(f"{base}/infer_bitpack,{r['infer_bitpack_us']:.2f},")
+        print(f"{base}/train_plain,{r['train_plain_us']:.2f},")
+        print(f"{base}/train_indexed,{r['train_indexed_us']:.2f},"
+              f"speedup={r['train_speedup']:.2f}")
+        print(f"{base}/work_ratio,,{r['work_ratio']:.5f}")
+
+    # --- paper §3 Remarks: analytic work ratios at paper scale ------------
+    from repro.configs.tm import imdb_like, mnist_like
+    from repro.core.indexing import dense_work
+    for exp, n_c in ((mnist_like(2, 20000), 20000),
+                     (imdb_like(20000, 20000), 20000)):
+        import dataclasses
+        cfg = dataclasses.replace(exp.tm, n_clauses=n_c)
+        # E[work]/dense = (#false literals × avg list len)/(n·2o)
+        #              = o × (n·len/2o) / (n·2o) = len/(4o) × ... exact:
+        ratio = (cfg.n_features * exp.avg_clause_len * cfg.n_clauses
+                 / cfg.n_literals) / dense_work(cfg) * cfg.n_classes
+        print(f"tm/paper_scale/{exp.name}/analytic_work_ratio,,"
+              f"{ratio:.5f}")
+
+    # --- LM zoo step wall-times -------------------------------------------
+    if not args.skip_lm:
+        from benchmarks import lm_step
+        for arch in __import__("repro.configs", fromlist=["ARCHS"]).ARCHS:
+            r = lm_step.bench_arch(arch)
+            print(f"lm/{r['arch']}/train_step,{r['us_per_token']:.2f},"
+                  f"family={r['family']} finite={r['loss_finite']}")
+
+
+if __name__ == "__main__":
+    main()

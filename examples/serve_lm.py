@@ -1,0 +1,16 @@
+"""Batched serving example: prefill + decode with rolling KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b
+
+Uses the reduced config of any assigned architecture (incl. MoE routing and
+sliding-window rolling caches) and reports prefill/decode throughput.
+"""
+import argparse
+import sys
+
+sys.argv = sys.argv  # keep argparse happy under -m and direct invocation
+
+from repro.launch.serve import main as serve_main  # noqa: E402
+
+if __name__ == "__main__":
+    serve_main()

@@ -1,0 +1,79 @@
+"""End-to-end driver (the paper's experiment): TM on MNIST-like data.
+
+    PYTHONPATH=src python examples/tm_mnist.py [--epochs 5] [--clauses 512]
+
+Full flow: synthetic binarized-MNIST stream → sequential (paper-faithful)
+TM learning → event-driven index maintenance → per-epoch accuracy with all
+four inference engines → throughput comparison + work-ratio report →
+checkpoint/restore round-trip through the shared checkpointer.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import TMConfig
+from repro.core.driver import TMDriver
+from repro.core.indexing import dense_work, indexed_work
+from repro.data.synthetic import binarized_images
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--clauses", type=int, default=256)
+    ap.add_argument("--features", type=int, default=784)
+    ap.add_argument("--train", type=int, default=2048)
+    ap.add_argument("--test", type=int, default=512)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_tm_ckpt")
+    args = ap.parse_args()
+
+    cfg = TMConfig(n_classes=10, n_clauses=args.clauses,
+                   n_features=args.features, n_states=127, s=10.0,
+                   threshold=25)
+    x, y = binarized_images(args.train + args.test, cfg.n_features,
+                            10, active=0.3, noise=0.02, seed=1)
+    x_tr = jnp.asarray(x[:args.train]); y_tr = jnp.asarray(y[:args.train])
+    x_te = jnp.asarray(x[args.train:]); y_te = jnp.asarray(y[args.train:])
+
+    driver = TMDriver.create(cfg)
+    ckpt = Checkpointer(args.ckpt_dir, keep=2)
+    key = jax.random.key(42)
+
+    for epoch in range(args.epochs):
+        key, sub = jax.random.split(key)
+        t0 = time.time()
+        driver.train_batch(x_tr, y_tr, sub)
+        dt = time.time() - t0
+        acc = driver.accuracy(x_te, y_te, engine="indexed")
+        print(f"epoch {epoch}: acc={acc:.3f}  "
+              f"train {args.train/dt:.0f} samples/s")
+        ckpt.save(epoch, driver.as_pytree(), blocking=True)
+
+    # inference engine comparison (the paper's Table-4 style measurement)
+    print("\ninference engines on", args.test, "samples:")
+    for engine in ("dense", "bitpack", "compact", "indexed"):
+        fn = lambda xx: driver.scores(xx, engine=engine)
+        jax.block_until_ready(fn(x_te))  # compile
+        t0 = time.time()
+        jax.block_until_ready(fn(x_te))
+        us = (time.time() - t0) / args.test * 1e6
+        print(f"  {engine:8s}: {us:8.1f} us/sample")
+
+    w = float(np.asarray(indexed_work(driver.index, x_te)).mean())
+    print(f"\nwork ratio: {w / dense_work(cfg):.4f} "
+          "(paper reports ≈0.02 on trained MNIST TMs)")
+
+    # checkpoint round-trip
+    restored = TMDriver.create(cfg).load_pytree(
+        ckpt.restore(ckpt.latest_step(), driver.as_pytree()))
+    same = bool(jnp.all(restored.predict(x_te, engine="indexed")
+                        == driver.predict(x_te, engine="indexed")))
+    print("checkpoint restore round-trip:", "ok" if same else "MISMATCH")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""End-to-end LM training example: a ~20M-param qwen3-family model.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+Exercises the full production path on CPU: sharded data pipeline →
+microbatched train_step (bf16 compute, fp32 masters) → cosine schedule →
+async checkpointing → loss goes down on a Zipf+ngram synthetic stream.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.data.pipeline import TokenBatcher
+from repro.models.model import build
+from repro.optim import adamw, compression
+from repro.steps import make_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    # ~20M params: qwen3 geometry, 4 layers × d512
+    cfg = dataclasses.replace(
+        get_config("qwen3-1.7b"), n_layers=4, d_model=512, n_heads=8,
+        n_kv_heads=4, head_dim=64, d_ff=1536, vocab=8192, remat=False,
+        tie_embeddings=True)
+    print(f"params ≈ {cfg.param_count()/1e6:.1f}M")
+
+    shape = ShapeSpec("example", "train", args.seq, args.batch)
+    step = make_step(cfg, shape, None, microbatches=2, peak_lr=1e-3,
+                     warmup_steps=20, total_steps=args.steps)
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    state = {"params": params, "opt": adamw.init(params),
+             "ef": compression.init_error_feedback(params)}
+    step_fn = jax.jit(step.fn, donate_argnums=(0,))
+    batcher = TokenBatcher(cfg.vocab, args.batch, args.seq, seed=3)
+    ckpt = Checkpointer(args.ckpt_dir, keep=2)
+
+    t0 = time.time()
+    first = last = None
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in batcher(i).items()}
+        state, metrics = step_fn(state, batch)
+        if i == 0:
+            first = float(metrics["nll"])
+        if i % 20 == 0 or i == args.steps - 1:
+            last = float(metrics["nll"])
+            tps = args.batch * args.seq * (i + 1) / (time.time() - t0)
+            print(f"step {i:4d}  nll {last:.4f}  lr {float(metrics['lr']):.2e}"
+                  f"  {tps:.0f} tok/s")
+        if (i + 1) % 100 == 0:
+            ckpt.save(i + 1, state)
+    ckpt.wait()
+    print(f"\nnll {first:.3f} → {last:.3f} "
+          f"({'improved ✓' if last < first else 'NOT improved ✗'})")
+
+
+if __name__ == "__main__":
+    main()

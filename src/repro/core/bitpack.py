@@ -1,0 +1,44 @@
+"""Bit-packing of literal/include vectors into uint32 words.
+
+The dense-evaluation hot path packs 32 literals per lane word:
+  clause falsified  ⇔  any_w( include_w & ~literal_w ) != 0
+This is the VPU-friendly dense layout the Pallas kernel tiles over.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32
+
+
+def n_words(n_bits: int) -> int:
+    return (n_bits + WORD - 1) // WORD
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """(…, K) {0,1} → (…, ceil(K/32)) uint32 (little-endian bit order)."""
+    k = bits.shape[-1]
+    w = n_words(k)
+    pad = w * WORD - k
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), bits.dtype)], axis=-1
+        )
+    b = bits.astype(jnp.uint32).reshape(bits.shape[:-1] + (w, WORD))
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, n_bits: int) -> jax.Array:
+    """(…, W) uint32 → (…, n_bits) uint8."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(words.shape[:-1] + (words.shape[-1] * WORD,))
+    return bits[..., :n_bits].astype(jnp.uint8)
+
+
+def packed_literals(x: jax.Array) -> jax.Array:
+    """(…, o) {0,1} features → (…, ceil(2o/32)) packed [x, ¬x] literals."""
+    lit = jnp.concatenate([x.astype(jnp.uint8), 1 - x.astype(jnp.uint8)], axis=-1)
+    return pack_bits(lit)

@@ -1,0 +1,62 @@
+"""TM at datacenter scale (beyond-paper): clause-sharded evaluation.
+
+The paper targets one CPU. The TM's vote structure is embarrassingly
+shardable: clauses over ``model`` (each shard owns n/16 clauses of every
+class), batch over ``data``/``pod``. Votes are partial sums reduced over
+``model`` — GSPMD inserts one (B, m)-sized all-reduce, the only collective.
+
+Learning shards the same way: Type I/II feedback is per-clause-local given
+the per-class vote (the one all-reduce), so TA-state updates never move.
+The dry-run lowers this on the production meshes (launch/dryrun.py --tm).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import tm
+from repro.core.types import TMConfig
+
+
+def tm_shardings(cfg: TMConfig, mesh):
+    """(state_sharding, batch_sharding, votes_sharding)."""
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    state = NamedSharding(mesh, P(None, "model", None))   # (m, n, 2o)
+    x = NamedSharding(mesh, P(baxes, None))               # (B, o)
+    y = NamedSharding(mesh, P(baxes))
+    votes = NamedSharding(mesh, P(baxes, None))           # (B, m)
+    return state, x, y, votes
+
+
+def make_sharded_votes(cfg: TMConfig, mesh):
+    """jit'd (ta_state, x) → (B, m) votes on the production mesh."""
+    state_sh, x_sh, _, votes_sh = tm_shardings(cfg, mesh)
+
+    def fn(ta_state, x):
+        from repro.core.types import TMState
+        return tm.scores(cfg, TMState(ta_state=ta_state), x)
+
+    return jax.jit(fn, in_shardings=(state_sh, x_sh),
+                   out_shardings=votes_sh)
+
+
+def make_sharded_update(cfg: TMConfig, mesh):
+    """jit'd batch-parallel TM update, clause-sharded.
+
+    Uses the batch-parallel learning variant (DESIGN.md §2): per-sample
+    deltas against the pre-batch state, summed — the approximation that
+    makes TM learning batch-shardable at all.
+    """
+    state_sh, x_sh, y_sh, _ = tm_shardings(cfg, mesh)
+
+    def fn(ta_state, xs, ys, seed):
+        from repro.core.types import TMState
+        st = TMState(ta_state=ta_state)
+        new = tm.update_batch_parallel(cfg, st, xs, ys,
+                                       jax.random.key(seed[0]))
+        return new.ta_state
+
+    seed_sh = NamedSharding(mesh, P(None))
+    return jax.jit(fn, in_shardings=(state_sh, x_sh, y_sh, seed_sh),
+                   out_shardings=state_sh, donate_argnums=(0,))

@@ -1,0 +1,97 @@
+"""TM training/serving driver — the paper's system glued to the substrate.
+
+Maintains the dense TA states (TPU-friendly learning) AND the paper's
+clause index, kept in sync event-wise after every batch (O(1) per boundary
+crossing — core/indexing.py). Inference can run through any engine:
+
+  * "dense"    — exhaustive baseline (paper's comparison point)
+  * "bitpack"  — Pallas fused eval+vote kernel
+  * "compact"  — gather over included literals (sparsity-proportional work)
+  * "indexed"  — the paper's falsification index (Eq. 4)
+
+Checkpointing reuses repro.checkpoint (TA states + index are one pytree).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import indexing, tm
+from repro.core.types import TMConfig, TMState, include_mask, init_tm
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class TMDriver:
+    cfg: TMConfig
+    state: TMState
+    index: indexing.ClauseIndex
+    max_events_per_batch: int = 4096
+
+    @staticmethod
+    def create(cfg: TMConfig, capacity: int | None = None) -> "TMDriver":
+        cap = capacity or cfg.n_clauses
+        return TMDriver(cfg=cfg, state=init_tm(cfg),
+                        index=indexing.empty_index(cfg, cap))
+
+    # -- learning -------------------------------------------------------------
+
+    def train_batch(self, xs, ys, rng, *, parallel: bool = False,
+                    sync_index: bool = True):
+        old_inc = include_mask(self.cfg, self.state)
+        upd = (tm.update_batch_parallel if parallel
+               else tm.update_batch_sequential)
+        self.state = upd(self.cfg, self.state, xs, ys, rng)
+        if sync_index:
+            new_inc = include_mask(self.cfg, self.state)
+            events = indexing.events_from_transition(
+                old_inc, new_inc, self.max_events_per_batch)
+            self.index = indexing.apply_events(self.index, events)
+        return self
+
+    def rebuild_index(self):
+        self.index = indexing.build_index(self.cfg, self.state,
+                                          self.index.capacity)
+        return self
+
+    # -- inference ------------------------------------------------------------
+
+    def scores(self, xs, *, engine: str = "indexed"):
+        if engine == "dense":
+            return tm.scores(self.cfg, self.state, xs)
+        if engine == "bitpack":
+            return kops.tm_votes(self.cfg, self.state, xs)
+        if engine == "bitpack_xla":
+            return tm.bitpacked_scores(self.cfg, self.state, xs)
+        if engine == "compact":
+            lmax = int(np.asarray(
+                include_mask(self.cfg, self.state).sum(-1)).max())
+            comp = indexing.compact(self.cfg, self.state, max(lmax, 1))
+            return indexing.compact_scores(self.cfg, comp, xs)
+        if engine == "indexed":
+            return indexing.indexed_scores(self.cfg, self.index, xs)
+        raise ValueError(engine)
+
+    def predict(self, xs, *, engine: str = "indexed"):
+        return jnp.argmax(self.scores(xs, engine=engine), axis=-1)
+
+    def accuracy(self, xs, ys, *, engine: str = "indexed") -> float:
+        return float(jnp.mean(
+            (self.predict(xs, engine=engine) == ys).astype(jnp.float32)))
+
+    # -- persistence ----------------------------------------------------------
+
+    def as_pytree(self):
+        return {"ta_state": self.state.ta_state,
+                "lists": self.index.lists,
+                "counts": self.index.counts,
+                "pos": self.index.pos}
+
+    def load_pytree(self, tree):
+        self.state = TMState(ta_state=tree["ta_state"])
+        self.index = indexing.ClauseIndex(
+            lists=tree["lists"], counts=tree["counts"], pos=tree["pos"])
+        return self

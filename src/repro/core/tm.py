@@ -1,0 +1,250 @@
+"""Tsetlin Machine forward pass and learning (paper §2).
+
+Evaluation paths (all semantically identical; cross-validated in tests):
+  * ``dense_clause_outputs``   — exhaustive evaluation, the paper's baseline.
+  * ``bitpacked`` (kernels/)   — dense over 32x packed words (VPU-friendly).
+  * ``compact_eval`` (indexing.py) — gather over included literals only;
+    work ∝ Σ clause lengths (the paper's sparsity).
+  * ``indexed_scores`` (indexing.py) — the paper's falsification index.
+
+Learning implements Type I / Type II feedback with explicit uniform draws
+passed in, so the pure-numpy oracle in ``core/ref.py`` can be driven with the
+*same* randomness and compared bit-exactly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import (
+    TMConfig,
+    TMState,
+    clause_polarity,
+    include_mask,
+    literals_from_input,
+)
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def dense_clause_outputs(
+    cfg: TMConfig, state: TMState, x: jax.Array, *, empty_output: int | None = None
+) -> jax.Array:
+    """Exhaustive clause evaluation. x: (B, o) {0,1} → (B, m, n) uint8.
+
+    A clause is true iff no included literal is false:
+      falsified(b, i, j) = ∃k: include[i,j,k] ∧ ¬literal[b,k].
+    Implemented as an integer matmul (false-literal count per clause) so the
+    dense baseline is itself vectorised — the paper's C baseline is a tight
+    loop; an un-vectorised JAX loop would strawman it.
+    """
+    lit = literals_from_input(x)                      # (B, 2o)
+    inc = include_mask(cfg, state)                    # (m, n, 2o)
+    false_lit = (1 - lit).astype(jnp.float32)         # (B, 2o)
+    # count of included-and-false literals per clause
+    counts = jnp.einsum("bk,mnk->bmn", false_lit, inc.astype(jnp.float32))
+    out = (counts < 0.5).astype(jnp.uint8)            # (B, m, n)
+    empty_output = cfg.empty_clause_output if empty_output is None else empty_output
+    if empty_output == 0:
+        empty = ~jnp.any(inc, axis=-1)                # (m, n)
+        out = out * (1 - empty.astype(jnp.uint8))[None]
+    return out
+
+
+def clause_votes(cfg: TMConfig, clause_out: jax.Array) -> jax.Array:
+    """(B, m, n) clause outputs → (B, m) polarity-signed vote sums (Eq. 3)."""
+    pol = clause_polarity(cfg)                        # (n,)
+    return jnp.einsum("bmn,n->bm", clause_out.astype(jnp.int32), pol)
+
+
+def scores(cfg: TMConfig, state: TMState, x: jax.Array) -> jax.Array:
+    """(B, m) class scores via the dense path."""
+    return clause_votes(cfg, dense_clause_outputs(cfg, state, x))
+
+
+def predict(cfg: TMConfig, state: TMState, x: jax.Array) -> jax.Array:
+    """(B,) argmax class (Eq. 3)."""
+    return jnp.argmax(scores(cfg, state, x), axis=-1)
+
+
+def bitpacked_scores(cfg: TMConfig, state: TMState, x: jax.Array) -> jax.Array:
+    """Dense eval over 32×-packed words, pure XLA (no Pallas).
+
+    Same algorithm as kernels/clause_eval.py — on CPU this is the
+    executable fast path (interpret-mode Pallas runs the kernel body in
+    Python); on TPU the Pallas kernel owns the fused-vote variant.
+    Memory traffic vs the f32-matmul dense baseline drops ~128×
+    (uint32 words vs f32 per literal).
+    """
+    from repro.core.bitpack import pack_bits, packed_literals
+
+    inc = pack_bits(include_mask(cfg, state).astype(jnp.uint8))  # (m,n,W)
+    lit = packed_literals(x)                                     # (B,W)
+    viol = inc[None] & (~lit)[:, None, None]                     # (B,m,n,W)
+    out = ~jnp.any(viol != 0, axis=-1)                           # (B,m,n)
+    return clause_votes(cfg, out.astype(jnp.uint8))
+
+
+# ---------------------------------------------------------------------------
+# Learning: Type I / Type II feedback (paper §2, Granmo 2018 semantics)
+# ---------------------------------------------------------------------------
+
+
+class FeedbackRands(NamedTuple):
+    """Uniform draws consumed by one class-round of feedback.
+
+    Passing these explicitly makes the update a deterministic function, so
+    the numpy oracle can replay identical randomness.
+    """
+
+    clause_gate: jax.Array  # (n,)      uniforms vs update probability p
+    type_i: jax.Array       # (n, 2o)   uniforms vs 1/s and (s-1)/s
+
+
+def draw_feedback_rands(cfg: TMConfig, rng: jax.Array) -> FeedbackRands:
+    k1, k2 = jax.random.split(rng)
+    return FeedbackRands(
+        clause_gate=jax.random.uniform(k1, (cfg.n_clauses,)),
+        type_i=jax.random.uniform(k2, (cfg.n_clauses, cfg.n_literals)),
+    )
+
+
+def _type_i_delta(
+    cfg: TMConfig,
+    clause_out: jax.Array,  # (n,) uint8 — evaluated with empty_output=1
+    lit: jax.Array,         # (2o,) uint8
+    include: jax.Array,     # (n, 2o) bool
+    u: jax.Array,           # (n, 2o) uniforms
+) -> jax.Array:
+    """Type I feedback state deltas (n, 2o) int16 — combats false negatives.
+
+    clause==1, lit==1 : +1 w.p. (s-1)/s   (or w.p. 1 if boost_true_positive)
+    clause==1, lit==0 : -1 w.p. 1/s
+    clause==0         : -1 w.p. 1/s   (all literals)
+    """
+    del include  # Type I acts on states regardless of current action
+    inv_s = 1.0 / cfg.s
+    c1 = (clause_out == 1)[:, None]                   # (n, 1)
+    l1 = (lit == 1)[None, :]                          # (1, 2o)
+    p_reward = 1.0 if cfg.boost_true_positive else (1.0 - inv_s)
+    reward = c1 & l1 & (u < p_reward)
+    penalty = ((c1 & ~l1) | ~c1) & (u < inv_s)
+    return reward.astype(jnp.int16) - penalty.astype(jnp.int16)
+
+
+def _type_ii_delta(
+    cfg: TMConfig,
+    clause_out: jax.Array,  # (n,)
+    lit: jax.Array,         # (2o,)
+    include: jax.Array,     # (n, 2o)
+) -> jax.Array:
+    """Type II feedback deltas (n, 2o) int16 — combats false positives.
+
+    clause==1, lit==0, action==exclude : +1 (deterministic)
+    """
+    c1 = (clause_out == 1)[:, None]
+    l0 = (lit == 0)[None, :]
+    return (c1 & l0 & ~include).astype(jnp.int16)
+
+
+def _class_round(
+    cfg: TMConfig,
+    ta_row: jax.Array,       # (n, 2o) — states of one class
+    lit: jax.Array,          # (2o,)
+    rands: FeedbackRands,
+    positive_round: jax.Array,  # scalar bool — True: target-class round
+) -> jax.Array:
+    """One feedback round for one class; returns updated (n, 2o) states."""
+    include = ta_row > cfg.n_states
+    false_cnt = jnp.einsum(
+        "k,nk->n", (1 - lit).astype(jnp.float32), include.astype(jnp.float32)
+    )
+    clause_out = (false_cnt < 0.5).astype(jnp.uint8)  # empty clause ⇒ 1 (learning)
+    t = float(cfg.threshold)
+    votes = jnp.clip(
+        jnp.sum(clause_out.astype(jnp.int32) * clause_polarity(cfg)), -t, t
+    )
+    p = jnp.where(positive_round, (t - votes) / (2 * t), (t + votes) / (2 * t))
+    active = rands.clause_gate < p                    # (n,)
+
+    pos_pol = jnp.arange(cfg.n_clauses) < cfg.half_clauses
+    # target round: positive clauses→Type I, negative→Type II; swapped otherwise
+    gets_type_i = jnp.where(positive_round, pos_pol, ~pos_pol)
+
+    d1 = _type_i_delta(cfg, clause_out, lit, include, rands.type_i)
+    d2 = _type_ii_delta(cfg, clause_out, lit, include)
+    delta = jnp.where(
+        (active & gets_type_i)[:, None], d1,
+        jnp.where((active & ~gets_type_i)[:, None], d2, 0),
+    ).astype(jnp.int16)
+    return jnp.clip(ta_row + delta, 1, 2 * cfg.n_states).astype(cfg.state_dtype)
+
+
+def update_sample(
+    cfg: TMConfig,
+    state: TMState,
+    x: jax.Array,        # (o,)
+    y: jax.Array,        # () int
+    rng: jax.Array,
+) -> TMState:
+    """One online update (the paper's per-sample learning).
+
+    Target class receives a positive round; one uniformly drawn *other*
+    class receives a negative round (standard multiclass TM scheme).
+    """
+    lit = literals_from_input(x)
+    k_neg, k_a, k_b = jax.random.split(rng, 3)
+    # sample negative class ≠ y
+    neg = jax.random.randint(k_neg, (), 0, cfg.n_classes - 1)
+    neg = jnp.where(neg >= y, neg + 1, neg)
+
+    ta = state.ta_state
+    row_pos = _class_round(cfg, ta[y], lit, draw_feedback_rands(cfg, k_a),
+                           jnp.asarray(True))
+    ta = ta.at[y].set(row_pos)
+    row_neg = _class_round(cfg, ta[neg], lit, draw_feedback_rands(cfg, k_b),
+                           jnp.asarray(False))
+    ta = ta.at[neg].set(row_neg)
+    return TMState(ta_state=ta)
+
+
+def update_batch_sequential(
+    cfg: TMConfig, state: TMState, xs: jax.Array, ys: jax.Array, rng: jax.Array
+) -> TMState:
+    """Faithful online learning over a batch: lax.scan of per-sample updates."""
+    keys = jax.random.split(rng, xs.shape[0])
+
+    def body(st, inp):
+        x, y, k = inp
+        return update_sample(cfg, st, x, y, k), None
+
+    out, _ = jax.lax.scan(body, state, (xs, ys, keys))
+    return out
+
+
+def update_batch_parallel(
+    cfg: TMConfig, state: TMState, xs: jax.Array, ys: jax.Array, rng: jax.Array
+) -> TMState:
+    """Beyond-paper: batch-parallel update (deltas computed vs the *same*
+    pre-batch state, then summed). An approximation of online learning —
+    documented in DESIGN.md; used for throughput-oriented training.
+    """
+    keys = jax.random.split(rng, xs.shape[0])
+
+    def one(x, y, k):
+        new = update_sample(cfg, state, x, y, k)
+        return (new.ta_state.astype(jnp.int32) - state.ta_state.astype(jnp.int32))
+
+    deltas = jax.vmap(one)(xs, ys, keys).sum(axis=0)
+    ta = jnp.clip(
+        state.ta_state.astype(jnp.int32) + deltas, 1, 2 * cfg.n_states
+    ).astype(cfg.state_dtype)
+    return TMState(ta_state=ta)
+
+
+def accuracy(cfg: TMConfig, state: TMState, xs: jax.Array, ys: jax.Array) -> jax.Array:
+    return jnp.mean((predict(cfg, state, xs) == ys).astype(jnp.float32))

@@ -1,0 +1,100 @@
+"""Core TM configuration and state containers.
+
+Layout conventions (paper §2-§3):
+  * ``o``        — number of input features; literal k < o is x_k, literal
+                   k >= o is ¬x_{k-o}; total ``2o`` literals.
+  * ``ta_state`` — int16 tensor ``(m, n, 2o)`` of Tsetlin Automaton states in
+                   ``[1, 2N]``; action = include iff state > N.
+  * clause polarity — clauses ``[0, n/2)`` are positive, ``[n/2, n)`` negative
+                   (paper Eq. 2/3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TMConfig:
+    """Hyper-parameters of a (multiclass) Tsetlin Machine."""
+
+    n_classes: int
+    n_clauses: int          # clauses per class (half positive / half negative)
+    n_features: int         # o
+    n_states: int = 127     # N; state space is [1, 2N]
+    s: float = 3.9          # specificity (reward/penalty split)
+    threshold: int = 15     # T (vote clamp / annealing parameter)
+    boost_true_positive: bool = False
+    # Paper Eq. (4) counts never-falsified (incl. empty) clauses as true.
+    # Classic TM inference outputs 0 for empty clauses. 1 == paper semantics.
+    empty_clause_output: int = 1
+    state_dtype: jnp.dtype = jnp.int16
+
+    def __post_init__(self):
+        if self.n_clauses % 2:
+            raise ValueError("n_clauses must be even (half per polarity)")
+        if self.empty_clause_output not in (0, 1):
+            raise ValueError("empty_clause_output must be 0 or 1")
+
+    @property
+    def n_literals(self) -> int:
+        return 2 * self.n_features
+
+    @property
+    def half_clauses(self) -> int:
+        return self.n_clauses // 2
+
+
+class TMState(NamedTuple):
+    """Learnable state of a TM (a pytree; checkpointable/shardable)."""
+
+    ta_state: jax.Array  # (m, n, 2o) int16 in [1, 2N]
+
+    @property
+    def n_classes(self) -> int:
+        return self.ta_state.shape[0]
+
+    @property
+    def n_clauses(self) -> int:
+        return self.ta_state.shape[1]
+
+    @property
+    def n_literals(self) -> int:
+        return self.ta_state.shape[2]
+
+
+def init_tm(cfg: TMConfig, rng: jax.Array | None = None) -> TMState:
+    """All TAs start just on the *exclude* side of the boundary (state N).
+
+    This is the standard initialisation and the one the paper's index
+    construction relies on: with every TA excluding, all inclusion lists
+    start empty.
+    """
+    del rng  # deterministic init; rng kept for API symmetry
+    ta = jnp.full(
+        (cfg.n_classes, cfg.n_clauses, cfg.n_literals),
+        cfg.n_states,
+        dtype=cfg.state_dtype,
+    )
+    return TMState(ta_state=ta)
+
+
+def literals_from_input(x: jax.Array) -> jax.Array:
+    """(…, o) {0,1} input → (…, 2o) literal truth values [x, ¬x]."""
+    x = x.astype(jnp.uint8)
+    return jnp.concatenate([x, 1 - x], axis=-1)
+
+
+def include_mask(cfg: TMConfig, state: TMState) -> jax.Array:
+    """(m, n, 2o) bool — TA action is *include*."""
+    return state.ta_state > cfg.n_states
+
+
+def clause_polarity(cfg: TMConfig) -> jax.Array:
+    """(n,) int32 — +1 for positive clauses, -1 for negative."""
+    return jnp.where(
+        jnp.arange(cfg.n_clauses) < cfg.half_clauses, 1, -1
+    ).astype(jnp.int32)

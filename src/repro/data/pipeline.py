@@ -1,0 +1,72 @@
+"""Sharded host data pipeline with background prefetch.
+
+Each process feeds only its addressable batch shard (``process_index``-keyed
+slicing — identical maths on a real multi-host pod), with a double-buffered
+prefetch thread so host data prep overlaps device steps. Determinism: the
+stream is a pure function of (seed, step), so restarts resume the exact
+batch sequence from the checkpointed step — a fault-tolerance requirement,
+not a nicety.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+import numpy as np
+
+from repro.data.synthetic import token_stream
+
+
+class TokenBatcher:
+    """Deterministic (seed, step) → batch of (tokens, labels)."""
+
+    def __init__(self, vocab: int, batch: int, seq: int, *, seed: int = 0,
+                 shard_index: int = 0, shard_count: int = 1):
+        self.vocab, self.batch, self.seq = vocab, batch, seq
+        self.seed = seed
+        self.shard_index, self.shard_count = shard_index, shard_count
+        assert batch % shard_count == 0
+        self.local_batch = batch // shard_count
+
+    def __call__(self, step: int) -> dict:
+        n = self.local_batch * (self.seq + 1)
+        # fold (seed, step, shard) into the stream offset — deterministic
+        toks = token_stream(
+            n, self.vocab,
+            seed=(self.seed * 1_000_003 + step * 613 + self.shard_index))
+        toks = toks.reshape(self.local_batch, self.seq + 1)
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+
+class Prefetcher:
+    """Double-buffered background prefetch of a step-indexed source."""
+
+    def __init__(self, source: Callable[[int], dict], start_step: int = 0,
+                 depth: int = 2):
+        self.source = source
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+
+        def work():
+            s = start_step
+            while not self._stop.is_set():
+                try:
+                    self.q.put((s, self.source(s)), timeout=0.2)
+                    s += 1
+                except queue.Full:
+                    continue
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def __iter__(self) -> Iterator[tuple[int, dict]]:
+        while True:
+            yield self.q.get()
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=2)

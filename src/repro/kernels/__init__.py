@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for the TM hot spots (validated via interpret mode)."""

@@ -1,0 +1,154 @@
+"""Pallas TPU kernels: bit-packed clause evaluation (+ fused voting).
+
+The paper's dense hot spot is evaluating m·n conjunctive clauses over 2o
+literals. TPU-native layout (DESIGN.md §2):
+
+  * literals bit-packed 32/uint32 word → operand bytes drop 32×;
+  * clauses on sublanes (tiles of CLAUSE_TILE), packed words on lanes
+    (padded to a multiple of 128 — MXU/VPU lane width);
+  * falsification is `any(include & ~literals)` — one VPU pass, no MXU;
+  * the vote reduction is fused so (B, m, n) clause outputs never
+    round-trip through HBM: the kernel emits (B, m) votes directly.
+
+VMEM budget per grid step (defaults): include block CLAUSE_TILE×W_pad×4B
++ literal block BATCH_TILE×W_pad×4B; W_pad ≤ 1280 (IMDb-40k literals) →
+≈ 0.7 MB, comfortably inside ~16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BATCH_TILE = 8       # sublane-friendly batch tile
+CLAUSE_TILE = 128    # clauses per grid step
+LANE = 128           # lane width; packed-word dim padded to a multiple
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# Fused eval + vote kernel
+# ---------------------------------------------------------------------------
+
+
+def _votes_kernel(inc_ref, lit_ref, o_ref, *, half: int, n_clauses: int):
+    """Grid (B_tiles, m, n_tiles); j = clause-tile index iterates fastest.
+
+    inc_ref: (1, CLAUSE_TILE, W)   uint32 — include masks of clause tile
+    lit_ref: (BATCH_TILE, W)       uint32 — packed literals
+    o_ref:   (BATCH_TILE, 1)       int32  — votes, accumulated over j
+    """
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    inc = inc_ref[0]                                    # (Ct, W)
+    lit = lit_ref[...]                                  # (Bt, W)
+    # violation: included literal that is false
+    viol = inc[None, :, :] & (~lit)[:, None, :]         # (Bt, Ct, W)
+    falsified = jnp.any(viol != 0, axis=-1)             # (Bt, Ct)
+    # polarity of the global clause index (first half positive — Eq. 2/3)
+    idx = j * CLAUSE_TILE + jax.lax.broadcasted_iota(
+        jnp.int32, (1, CLAUSE_TILE), 1
+    )                                                   # (1, Ct)
+    sign = jnp.where(idx < half, 1, -1)
+    sign = jnp.where(idx < n_clauses, sign, 0)          # clause padding → 0
+    votes = jnp.sum(jnp.where(falsified, 0, sign), axis=1, dtype=jnp.int32)
+    o_ref[...] += votes[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def clause_votes_packed(
+    include_packed: jax.Array,  # (m, n, W) uint32
+    lit_packed: jax.Array,      # (B, W) uint32
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused bit-packed clause evaluation + polarity vote: (B, m) int32.
+
+    Padding invariants: include words beyond 2o are 0 (never falsify);
+    literal words beyond 2o may be anything (ANDed against 0 includes);
+    clause rows beyond n get sign 0.
+    """
+    m, n, w = include_packed.shape
+    b = lit_packed.shape[0]
+    half = n // 2
+
+    inc = _pad_to(_pad_to(include_packed, 2, LANE), 1, CLAUSE_TILE)
+    lit = _pad_to(_pad_to(lit_packed, 1, LANE), 0, BATCH_TILE)
+    n_pad, w_pad = inc.shape[1], inc.shape[2]
+    b_pad = lit.shape[0]
+
+    grid = (b_pad // BATCH_TILE, m, n_pad // CLAUSE_TILE)
+    out = pl.pallas_call(
+        functools.partial(_votes_kernel, half=half, n_clauses=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, CLAUSE_TILE, w_pad), lambda bb, i, j: (i, j, 0)),
+            pl.BlockSpec((BATCH_TILE, w_pad), lambda bb, i, j: (bb, 0)),
+        ],
+        out_specs=pl.BlockSpec((BATCH_TILE, 1), lambda bb, i, j: (bb, i)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, m), jnp.int32),
+        interpret=interpret,
+    )(inc, lit)
+    return out[:b]
+
+
+# ---------------------------------------------------------------------------
+# Raw clause-output kernel (training needs per-clause outputs)
+# ---------------------------------------------------------------------------
+
+
+def _outputs_kernel(inc_ref, lit_ref, o_ref):
+    """Grid (B_tiles, m, n_tiles): emit clause outputs for one tile."""
+    inc = inc_ref[0]                                    # (Ct, W)
+    lit = lit_ref[...]                                  # (Bt, W)
+    viol = inc[None, :, :] & (~lit)[:, None, :]
+    falsified = jnp.any(viol != 0, axis=-1)             # (Bt, Ct)
+    o_ref[...] = jnp.where(falsified, 0, 1).astype(jnp.int8)[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def clause_outputs_packed(
+    include_packed: jax.Array,  # (m, n, W) uint32
+    lit_packed: jax.Array,      # (B, W) uint32
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Bit-packed clause outputs: (B, m, n) int8 (empty clauses → 1)."""
+    m, n, w = include_packed.shape
+    b = lit_packed.shape[0]
+
+    inc = _pad_to(_pad_to(include_packed, 2, LANE), 1, CLAUSE_TILE)
+    lit = _pad_to(_pad_to(lit_packed, 1, LANE), 0, BATCH_TILE)
+    n_pad, w_pad = inc.shape[1], inc.shape[2]
+    b_pad = lit.shape[0]
+
+    grid = (b_pad // BATCH_TILE, m, n_pad // CLAUSE_TILE)
+    out = pl.pallas_call(
+        _outputs_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, CLAUSE_TILE, w_pad), lambda bb, i, j: (i, j, 0)),
+            pl.BlockSpec((BATCH_TILE, w_pad), lambda bb, i, j: (bb, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (BATCH_TILE, 1, CLAUSE_TILE), lambda bb, i, j: (bb, i, j)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b_pad, m, n_pad), jnp.int8),
+        interpret=interpret,
+    )(inc, lit)
+    return out[:b, :, :n]

@@ -1,0 +1,67 @@
+"""Public jit'd wrappers around the Pallas TM kernels.
+
+``interpret=True`` (default on this CPU container) executes kernel bodies in
+Python via the Pallas interpreter; on a real TPU pass ``interpret=False``.
+The wrappers own the packing step so callers deal in TM-native tensors.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitpack import pack_bits, packed_literals
+from repro.core.types import TMConfig, TMState, include_mask
+from repro.kernels import clause_eval, ta_update as ta_update_mod
+
+
+def pack_include(cfg: TMConfig, state: TMState) -> jax.Array:
+    """(m, n, 2o) include mask → (m, n, W) uint32."""
+    return pack_bits(include_mask(cfg, state).astype(jnp.uint8))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def tm_votes(
+    cfg: TMConfig, state: TMState, x: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """(B, o) inputs → (B, m) votes via the fused Pallas kernel."""
+    inc = pack_include(cfg, state)
+    lit = packed_literals(x)
+    return clause_eval.clause_votes_packed(inc, lit, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def tm_predict(
+    cfg: TMConfig, state: TMState, x: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    return jnp.argmax(tm_votes(cfg, state, x, interpret=interpret), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def tm_clause_outputs(
+    cfg: TMConfig, state: TMState, x: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """(B, o) → (B, m, n) int8 clause outputs (learning semantics)."""
+    inc = pack_include(cfg, state)
+    lit = packed_literals(x)
+    return clause_eval.clause_outputs_packed(inc, lit, interpret=interpret)
+
+
+def tm_ta_update(
+    cfg: TMConfig,
+    ta_row: jax.Array,
+    lit: jax.Array,
+    clause_out: jax.Array,
+    gets_type_i: jax.Array,
+    active: jax.Array,
+    uniforms: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Kernel-backed Type I/II feedback for one class row."""
+    return ta_update_mod.ta_update(
+        ta_row, lit, clause_out, gets_type_i, active, uniforms,
+        n_states=cfg.n_states, s=cfg.s,
+        boost_true_positive=cfg.boost_true_positive, interpret=interpret,
+    )

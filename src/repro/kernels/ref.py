@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (no Pallas, no bit tricks)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clause_votes_ref(
+    include: jax.Array,  # (m, n, 2o) bool
+    lit: jax.Array,      # (B, 2o) {0,1}
+) -> jax.Array:
+    """(B, m) int32 polarity-signed votes; empty clauses count as true."""
+    m, n, L = include.shape
+    false_lit = (1 - lit).astype(jnp.float32)
+    counts = jnp.einsum("bk,mnk->bmn", false_lit, include.astype(jnp.float32))
+    out = counts < 0.5                                   # (B, m, n) true/false
+    sign = jnp.where(jnp.arange(n) < n // 2, 1, -1)
+    return jnp.einsum("bmn,n->bm", out.astype(jnp.int32), sign)
+
+
+def clause_outputs_ref(include: jax.Array, lit: jax.Array) -> jax.Array:
+    """(B, m, n) int8 clause outputs; empty clauses → 1."""
+    false_lit = (1 - lit).astype(jnp.float32)
+    counts = jnp.einsum("bk,mnk->bmn", false_lit, include.astype(jnp.float32))
+    return (counts < 0.5).astype(jnp.int8)
+
+
+def ta_update_ref(
+    ta_row: jax.Array,       # (n, 2o) int16
+    lit: jax.Array,          # (2o,)
+    clause_out: jax.Array,   # (n,)
+    gets_type_i: jax.Array,  # (n,) bool
+    active: jax.Array,       # (n,) bool
+    uniforms: jax.Array,     # (n, 2o)
+    *,
+    n_states: int,
+    s: float,
+    boost_true_positive: bool = False,
+) -> jax.Array:
+    include = ta_row > n_states
+    inv_s = 1.0 / s
+    p_reward = 1.0 if boost_true_positive else 1.0 - inv_s
+    c1 = (clause_out == 1)[:, None]
+    l1 = (lit == 1)[None, :]
+    reward = c1 & l1 & (uniforms < p_reward)
+    penalty = ((c1 & ~l1) | ~c1) & (uniforms < inv_s)
+    d1 = reward.astype(jnp.int16) - penalty.astype(jnp.int16)
+    d2 = (c1 & ~l1 & ~include).astype(jnp.int16)
+    act = active.astype(bool)[:, None]
+    t1 = gets_type_i.astype(bool)[:, None]
+    delta = jnp.where(act & t1, d1, jnp.where(act & ~t1, d2, 0))
+    return jnp.clip(ta_row + delta, 1, 2 * n_states).astype(jnp.int16)

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: Type I / Type II TA feedback application.
+
+Second hot spot of TM *learning*: given precomputed clause outputs and the
+per-clause feedback routing (active gate, Type I vs Type II), apply the
+per-(clause, literal) state transitions. Elementwise over (n, 2o) with two
+broadcast operands — a pure VPU kernel; tiling keeps the uniforms and TA
+block resident in VMEM so the update is one HBM read + one write of the
+TA state per step.
+
+Layout: clauses on sublanes (CLAUSE_TILE), literals on lanes (LIT_TILE,
+multiple of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CLAUSE_TILE = 8
+LIT_TILE = 128
+
+
+def _pad_to(x, axis, mult, value=0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _update_kernel(
+    ta_ref,        # (Ct, Lt) int16
+    lit_ref,       # (1, Lt) int8   — literal truth values
+    cout_ref,      # (Ct, 1) int8   — clause outputs (learning semantics)
+    type_i_ref,    # (Ct, 1) int8   — 1: Type I, 0: Type II (inactive → gate)
+    active_ref,    # (Ct, 1) int8   — clause update gate (bernoulli(p))
+    u_ref,         # (Ct, Lt) float32 — uniforms for Type I branches
+    o_ref,         # (Ct, Lt) int16
+    *,
+    n_states: int,
+    s: float,
+    boost_true_positive: bool,
+):
+    ta = ta_ref[...]
+    lit = lit_ref[0][None, :]                     # (1, Lt)
+    c1 = cout_ref[...] == 1                       # (Ct, 1)
+    is_t1 = type_i_ref[...] == 1
+    active = active_ref[...] == 1
+    u = u_ref[...]
+    include = ta > n_states
+
+    inv_s = 1.0 / s
+    p_reward = 1.0 if boost_true_positive else 1.0 - inv_s
+    l1 = lit == 1
+
+    # Type I deltas
+    reward = c1 & l1 & (u < p_reward)
+    penalty = ((c1 & ~l1) | ~c1) & (u < inv_s)
+    d1 = reward.astype(jnp.int16) - penalty.astype(jnp.int16)
+    # Type II deltas
+    d2 = (c1 & ~l1 & ~include).astype(jnp.int16)
+
+    delta = jnp.where(active & is_t1, d1, jnp.where(active & ~is_t1, d2, 0))
+    o_ref[...] = jnp.clip(ta + delta, 1, 2 * n_states).astype(jnp.int16)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_states", "s", "boost_true_positive", "interpret")
+)
+def ta_update(
+    ta_row: jax.Array,       # (n, 2o) int16 — one class's TA states
+    lit: jax.Array,          # (2o,) int8/uint8
+    clause_out: jax.Array,   # (n,) int8
+    gets_type_i: jax.Array,  # (n,) bool/int8
+    active: jax.Array,       # (n,) bool/int8
+    uniforms: jax.Array,     # (n, 2o) float32
+    *,
+    n_states: int,
+    s: float,
+    boost_true_positive: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Apply one class-round of feedback. Returns updated (n, 2o) int16."""
+    n, L = ta_row.shape
+    ta = _pad_to(_pad_to(ta_row, 1, LIT_TILE), 0, CLAUSE_TILE)
+    n_pad, l_pad = ta.shape
+    litp = _pad_to(lit.astype(jnp.int8)[None, :], 1, LIT_TILE)
+    cout = _pad_to(clause_out.astype(jnp.int8)[:, None], 0, CLAUSE_TILE)
+    t1 = _pad_to(gets_type_i.astype(jnp.int8)[:, None], 0, CLAUSE_TILE)
+    act = _pad_to(active.astype(jnp.int8)[:, None], 0, CLAUSE_TILE)
+    # uniform padding value 1.0 ⇒ no spurious transitions in padded region
+    u = _pad_to(_pad_to(uniforms, 1, LIT_TILE, 1.0), 0, CLAUSE_TILE, 1.0)
+
+    grid = (n_pad // CLAUSE_TILE, l_pad // LIT_TILE)
+    out = pl.pallas_call(
+        functools.partial(
+            _update_kernel,
+            n_states=n_states,
+            s=s,
+            boost_true_positive=boost_true_positive,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((CLAUSE_TILE, LIT_TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((1, LIT_TILE), lambda i, j: (0, j)),
+            pl.BlockSpec((CLAUSE_TILE, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((CLAUSE_TILE, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((CLAUSE_TILE, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((CLAUSE_TILE, LIT_TILE), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((CLAUSE_TILE, LIT_TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, l_pad), jnp.int16),
+        interpret=interpret,
+    )(ta, litp, cout, t1, act, u)
+    return out[:n, :L]

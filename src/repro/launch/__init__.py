@@ -1,0 +1,1 @@
+"""Launch layer: meshes, multi-pod dry-run, roofline, train/serve CLIs."""

@@ -1,0 +1,148 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init). Everything below may import jax.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ARCHS, SKIPPED_CELLS, get_config, get_shape, shapes_for)
+from repro.launch import hlo as hlo_mod  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.sharding import named_shardings  # noqa: E402
+from repro.steps import make_step  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               step_kwargs=None, cfg_override=None, save=True,
+               tag="baseline"):
+    """Lower + compile one (arch × shape × mesh) cell; returns the record.
+
+    This is deliverable (e): ``.lower().compile()`` must succeed for every
+    cell; memory_analysis proves fit, cost_analysis feeds §Roofline.
+    """
+    cfg = get_config(arch)
+    if cfg_override:
+        cfg = dataclasses.replace(cfg, **cfg_override)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    step = make_step(cfg, shape, mesh, **(step_kwargs or {}))
+    in_sh = named_shardings(mesh, step.in_specs)
+    out_sh = named_shardings(mesh, step.out_specs)
+    # donate what the next step overwrites: train → state, decode → caches;
+    # serving params are shared across steps and must never be donated.
+    donate = {"train": (0,), "decode": (1,), "prefill": ()}[step.meta["kind"]]
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(step.fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*step.arg_structs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = hlo_mod.collective_stats(text)
+    n_dev = mesh.devices.size
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "devices": n_dev,
+        "tag": tag,
+        "memory": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "alias_bytes_per_device": ma.alias_size_in_bytes,
+            "peak_estimate_per_device": (
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+        },
+        "cost": {
+            "flops_per_device_hlo": ca.get("flops", 0.0),
+            "bytes_accessed_per_device_hlo": ca.get("bytes accessed", 0.0),
+        },
+        "collectives": {
+            "total_bytes": coll.total_bytes,
+            "by_kind": coll.by_kind,
+            "count": coll.count,
+        },
+        "loop_dims": step.loop_dims,
+        "meta": step.meta,
+        "times": {"lower_s": round(t_lower, 2),
+                  "compile_s": round(t_compile, 2)},
+    }
+    if save:
+        out = RESULTS / arch / shape_name
+        out.mkdir(parents=True, exist_ok=True)
+        fn = out / f"{record['mesh']}.{tag}.json"
+        fn.write_text(json.dumps(record, indent=2))
+        # keep a trimmed collective schedule for §Dry-run
+        (out / f"{record['mesh']}.{tag}.schedule.txt").write_text(
+            "\n".join(f"{k} {b} {rg}" for k, b, rg in coll.schedule[:400]))
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCHS if (args.all or not args.arch) else (args.arch,)
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            if args.shape and shape.name != args.shape:
+                continue
+            cells.append((arch, shape.name))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch, shape_name in cells:
+        for multi in meshes:
+            mesh_name = "2x16x16" if multi else "16x16"
+            out = RESULTS / arch / shape_name / f"{mesh_name}.baseline.json"
+            if out.exists():
+                print(f"[skip-cached] {arch} × {shape_name} × {mesh_name}")
+                continue
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_name} ...",
+                  flush=True)
+            try:
+                rec = lower_cell(arch, shape_name, multi_pod=multi)
+                mem = rec["memory"]["peak_estimate_per_device"] / 2**30
+                print(f"  ok: peak≈{mem:.2f} GiB/dev, "
+                      f"flops={rec['cost']['flops_per_device_hlo']:.3g}, "
+                      f"coll={rec['collectives']['total_bytes']:.3g}B, "
+                      f"compile={rec['times']['compile_s']}s", flush=True)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((arch, shape_name, mesh_name, repr(e)))
+                print(f"  FAIL: {e}\n{traceback.format_exc()}", flush=True)
+    skipped = [f"{a} × {s}: {why}" for (a, s), why in SKIPPED_CELLS.items()]
+    print("\nskipped cells (per DESIGN.md §5):")
+    for s in skipped:
+        print("  " + s)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall requested cells lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""HLO-text analysis: collective bytes + schedule extraction.
+
+``collective_bytes`` parses ``compiled.as_text()`` and sums the operand
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Shapes are parsed from the HLO result/operand types.
+
+Instructions inside ``while`` bodies are counted once per *appearance* —
+the roofline harness eliminates that undercount structurally by probing
+with fully unrolled programs (DESIGN.md §6), so this parser stays simple
+and exact for the programs it is given.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# e.g.:  %all-reduce.5 = f32[64,128]{1,0} all-reduce(%dot), channel_id=...
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLL_KINDS) +
+    r")(-start|-done)?\(")
+
+
+def shape_bytes(type_str: str) -> int:
+    """'f32[64,128]{1,0}' → bytes. Tuples: sum of components."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int
+    by_kind: dict
+    count: int
+    schedule: list  # (kind, bytes, replica_groups snippet) in program order
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    total = 0
+    by_kind: dict = defaultdict(int)
+    schedule = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # async pair: count the -start only
+        kind = m.group(2)
+        nbytes = shape_bytes(m.group(1))
+        rg = ""
+        rgm = re.search(r"replica_groups=(\S+?)(,|$| )", line)
+        if rgm:
+            rg = rgm.group(1)[:48]
+        total += nbytes
+        by_kind[kind] += nbytes
+        schedule.append((kind, nbytes, rg))
+    return CollectiveStats(total_bytes=total, by_kind=dict(by_kind),
+                           count=len(schedule), schedule=schedule)

@@ -1,0 +1,69 @@
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline tables from results/."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, SKIPPED_CELLS, get_config, shapes_for
+
+ROOT = Path(__file__).resolve().parents[3]
+DRY = ROOT / "results" / "dryrun"
+ROOF = ROOT / "results" / "roofline"
+
+
+def _load(path):
+    return json.loads(path.read_text()) if path.exists() else None
+
+
+def dryrun_table(tag="baseline") -> str:
+    rows = ["| arch | shape | mesh | peak GiB/dev | HLO GFLOPs/dev (scan-1) "
+            "| collective MB/dev | compile s |",
+            "|---|---|---|---|---|---|---|"]
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            for mesh in ("16x16", "2x16x16"):
+                r = _load(DRY / arch / shape.name / f"{mesh}.{tag}.json")
+                if r is None:
+                    rows.append(f"| {arch} | {shape.name} | {mesh} | "
+                                "MISSING | | | |")
+                    continue
+                m = r["memory"]["peak_estimate_per_device"] / 2**30
+                fl = r["cost"]["flops_per_device_hlo"] / 1e9
+                cb = r["collectives"]["total_bytes"] / 2**20
+                rows.append(
+                    f"| {arch} | {shape.name} | {mesh} | {m:.2f} | "
+                    f"{fl:.1f} | {cb:.1f} | {r['times']['compile_s']} |")
+        for (a, s), why in SKIPPED_CELLS.items():
+            if a == arch:
+                rows.append(f"| {arch} | {s} | — | {why} | | | |")
+    return "\n".join(rows)
+
+
+def roofline_table(tag="baseline") -> str:
+    hdr = ("| arch | shape | compute ms | memory ms | collective ms | "
+           "dominant | MODEL_GFLOPs/dev | useful ratio | bound ms |")
+    rows = [hdr, "|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            r = _load(ROOF / arch / shape.name / f"16x16.{tag}.json")
+            if r is None:
+                rows.append(f"| {arch} | {shape.name} | MISSING | | | | | | |")
+                continue
+            t = r["terms"]
+            rows.append(
+                f"| {arch} | {shape.name} | {t['compute_s']*1e3:.3f} | "
+                f"{t['memory_s']*1e3:.3f} | {t['collective_s']*1e3:.3f} | "
+                f"{t['dominant']} | "
+                f"{r['model_flops_per_device']/1e9:.1f} | "
+                f"{r['useful_flops_ratio']:.2f} | "
+                f"{t['step_lower_bound_s']*1e3:.3f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print("## §Dry-run\n")
+    print(dryrun_table())
+    print("\n## §Roofline\n")
+    print(roofline_table())

@@ -1,0 +1,7 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Env must precede any jax import (same contract as dryrun.py).
+
+if __name__ == "__main__":
+    from repro.launch.roofline import main  # noqa: E402
+    main()

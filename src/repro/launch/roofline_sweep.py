@@ -1,0 +1,51 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Env before jax import (same contract as dryrun.py).
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import traceback     # noqa: E402
+
+from repro.configs import ARCHS, get_config, shapes_for  # noqa: E402
+from repro.launch.roofline import RESULTS, analyze_cell  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="roofline probe sweep (single-pod mesh per brief)")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    archs = (args.arch,) if args.arch else ARCHS
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            out = RESULTS / arch / shape.name / f"16x16.{args.tag}.json"
+            if out.exists():
+                print(f"[skip-cached] {arch} × {shape.name}")
+                continue
+            print(f"[roofline] {arch} × {shape.name} ...", flush=True)
+            try:
+                rec = analyze_cell(arch, shape.name, multi_pod=False,
+                                   tag=args.tag)
+                t = rec["terms"]
+                print(f"  compute={t['compute_s']*1e3:.2f}ms "
+                      f"memory={t['memory_s']*1e3:.2f}ms "
+                      f"coll={t['collective_s']*1e3:.2f}ms "
+                      f"dom={t['dominant']} "
+                      f"useful={rec['useful_flops_ratio']:.2f}", flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape.name, repr(e)))
+                print(f"  FAIL: {e}\n{traceback.format_exc()}", flush=True)
+    if failures:
+        print(f"{len(failures)} failures:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("roofline sweep complete")
+
+
+if __name__ == "__main__":
+    main()

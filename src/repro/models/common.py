@@ -1,0 +1,114 @@
+"""Shared neural layers: norms, rope, embeddings, initializers.
+
+Pure-JAX module style: each layer is an ``init_*`` returning a params dict
+and a paired ``apply`` function. Params are nested dicts (pytrees); layer
+stacks store params with a leading (L, …) dim consumed by ``lax.scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(rng, shape, std, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(rng, -2.0, 2.0, shape, dtype)
+
+
+def dense_init(rng, d_in, d_out, dtype=jnp.float32):
+    """Fan-in scaled init (matches common LM practice)."""
+    return truncated_normal(rng, (d_in, d_out), d_in ** -0.5, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(dtype)
+
+
+def init_layernorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) or (S,). Rotates pairs (even, odd
+    halves convention — matches llama/qwen)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (Dh/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d: int) -> jax.Array:
+    """Whisper-style sinusoidal table (n_pos, d)."""
+    half = d // 2
+    log_timescale = jnp.log(10000.0) / (half - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half, dtype=jnp.float32))
+    scaled = jnp.arange(n_pos, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(rng, vocab, d, dtype=jnp.float32):
+    return {"tokens": truncated_normal(rng, (vocab, d), 1.0, dtype)}
+
+
+def embed(p, tokens, compute_dtype=jnp.bfloat16):
+    return p["tokens"].astype(compute_dtype)[tokens]
+
+
+def unembed(p_embed, lm_head, x):
+    """Logits; tied embeddings when lm_head is None."""
+    if lm_head is None:
+        w = p_embed["tokens"].astype(x.dtype).T
+    else:
+        w = lm_head.astype(x.dtype)
+    return x @ w
+
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),  # nemotron/minitron
+    }[name]

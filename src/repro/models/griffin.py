@@ -1,0 +1,113 @@
+"""Griffin / RecurrentGemma (arXiv:2402.19427): RG-LRU + local attention, 1:2.
+
+Temporal pattern: repeating (recurrent, recurrent, local-attention) groups.
+Recurrent block: gated dual-branch — gelu(x·W_y) ⊙ RG-LRU(conv1d(x·W_x)),
+projected back by W_o. RG-LRU is a per-channel gated diagonal recurrence:
+
+    r_t = σ(x_t·W_a + b_a)          (recurrence gate)
+    i_t = σ(x_t·W_i + b_i)          (input gate)
+    log a_t = -c · softplus(Λ) ⊙ r_t             (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+evaluated by the exact chunked diagonal engine (models/recurrence.py).
+Deviation noted in DESIGN.md: gate projections are full d_rnn×d_rnn linears
+(the reference uses block-diagonal); identical cost profile at this width.
+
+Decode state per layer: conv tail (B, 3, d_rnn) + LRU h (B, d_rnn); the
+attention blocks carry a ``local_window`` rolling KV cache — together this
+is why recurrentgemma qualifies for ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.recurrence import chunked_diag_recurrence
+from repro.sharding import Policy
+
+RG_LRU_C = 8.0
+CONV_W = 4
+
+
+def init_rglru(rng, d_rnn, dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    # Λ init so that a^c ∈ (0.9, 0.999) roughly — griffin appendix
+    lam = jax.random.uniform(ks[0], (d_rnn,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam) / RG_LRU_C))    # inverse softplus
+    return {
+        "w_a": dense_init(ks[1], d_rnn, d_rnn, dtype),
+        "b_a": jnp.zeros((d_rnn,), jnp.float32),
+        "w_i": dense_init(ks[2], d_rnn, d_rnn, dtype),
+        "b_i": jnp.zeros((d_rnn,), jnp.float32),
+        "lam": lam,
+    }
+
+
+def _rglru_coeffs(p, x):
+    """x: (…, d_rnn) → (a, b) of the diagonal recurrence, fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a²) via expm1 for stability near a≈1
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = mult * (i * xf)
+    return a, b
+
+
+def init_recurrent_block(rng, d, d_rnn, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    return {
+        "w_y": dense_init(ks[0], d, d_rnn, dtype),
+        "w_x": dense_init(ks[1], d, d_rnn, dtype),
+        "conv_w": 0.01 * jax.random.normal(ks[2], (CONV_W, d_rnn), dtype),
+        "conv_b": jnp.zeros((d_rnn,), jnp.float32),
+        "rglru": init_rglru(ks[3], d_rnn, dtype),
+        "w_o": dense_init(jax.random.fold_in(rng, 9), d_rnn, d, dtype),
+    }
+
+
+def _causal_conv_seq(p, x, tail):
+    """Depthwise causal conv width 4. x: (B,T,dr); tail: (B,3,dr) history."""
+    full = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(
+        full[:, CONV_W - 1 - i: full.shape[1] - i] * p["conv_w"][CONV_W - 1 - i].astype(x.dtype)
+        for i in range(CONV_W)
+    )
+    new_tail = full[:, -(CONV_W - 1):]
+    return out + p["conv_b"].astype(x.dtype), new_tail
+
+
+def recurrent_block_seq(p, x, state, *, chunk, policy: Policy,
+                        unroll=False):
+    """x: (B,T,d); state: {"conv": (B,3,dr), "h": (B,dr)}."""
+    y = jax.nn.gelu(x @ p["w_y"].astype(x.dtype))
+    xr = x @ p["w_x"].astype(x.dtype)
+    xr, conv_tail = _causal_conv_seq(p, xr, state["conv"])
+    a, b = _rglru_coeffs(p["rglru"], xr)
+    hs, hT = chunked_diag_recurrence(
+        a.swapaxes(0, 1), b.swapaxes(0, 1), state["h"].astype(jnp.float32),
+        chunk=chunk, unroll=unroll)
+    h = hs.swapaxes(0, 1).astype(x.dtype)                 # (B,T,dr)
+    out = (h * y) @ p["w_o"].astype(x.dtype)
+    return out, {"conv": conv_tail.astype(jnp.float32), "h": hT}
+
+
+def recurrent_block_step(p, x, state, *, policy: Policy):
+    """x: (B, d) single token."""
+    y = jax.nn.gelu(x @ p["w_y"].astype(x.dtype))
+    xr = x @ p["w_x"].astype(x.dtype)
+    hist = jnp.concatenate([state["conv"].astype(x.dtype), xr[:, None]], 1)
+    conv = sum(hist[:, -1 - i] * p["conv_w"][CONV_W - 1 - i].astype(x.dtype)
+               for i in range(CONV_W)) + p["conv_b"].astype(x.dtype)
+    a, b = _rglru_coeffs(p["rglru"], conv)
+    h = a * state["h"].astype(jnp.float32) + b
+    out = (h.astype(x.dtype) * y) @ p["w_o"].astype(x.dtype)
+    return out, {"conv": hist[:, 1:].astype(jnp.float32), "h": h}
+
+
+def init_griffin_state(batch, d_rnn, dtype=jnp.float32):
+    return {"conv": jnp.zeros((batch, CONV_W - 1, d_rnn), jnp.float32),
+            "h": jnp.zeros((batch, d_rnn), jnp.float32)}

@@ -1,0 +1,31 @@
+"""Dense MLPs: SwiGLU (llama-family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, dense_init
+from repro.sharding import Policy
+
+
+def init_mlp(rng, d_model, d_ff, *, gated=True, dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    p = {
+        "w_up": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[1], d_ff, d_model, dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(p, x, *, act="silu", policy: Policy):
+    fn = activation(act)
+    up = x @ p["w_up"].astype(x.dtype)
+    if "w_gate" in p:
+        gate = x @ p["w_gate"].astype(x.dtype)
+        h = fn(gate) * up
+    else:
+        h = fn(up)
+    h = policy.act_btd_tp(h)
+    return h @ p["w_down"].astype(x.dtype)

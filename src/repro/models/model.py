@@ -1,0 +1,143 @@
+"""Uniform model facade: one API across all families + input specs.
+
+  build(cfg)  → Model with init/apply_train/prefill/decode_step/init_cache
+  input_specs(cfg, shape, for_lowering) → kwargs of ShapeDtypeStructs (or
+  zeros) for the requested shape cell — the dry-run's no-allocation inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import transformer, whisper
+from repro.sharding import Policy
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    apply_train: Callable   # (policy, params, **batch) -> (logits, aux)
+    prefill: Callable       # (policy, params, cache_len, **batch) -> (logits, cache)
+    decode_step: Callable   # (policy, params, token, caches, pos) -> (logits, cache)
+    init_cache: Callable    # (batch, cache_len) -> cache pytree
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        def init(rng, max_dec_positions=4096):
+            return whisper.init_params(rng, cfg, max_dec_positions)
+
+        def apply_train(policy, params, *, tokens, frames):
+            return whisper.apply_train(cfg, policy, params, tokens, frames)
+
+        def prefill_fn(policy, params, cache_len, *, tokens, frames):
+            return whisper.prefill(cfg, policy, params, tokens, frames,
+                                   cache_len)
+
+        def decode_fn(policy, params, token, caches, pos):
+            return whisper.decode_step(cfg, policy, params, token, caches,
+                                       pos)
+
+        def init_cache(batch, cache_len):
+            return whisper.init_dec_cache(cfg, batch, cache_len, cfg.enc_seq)
+
+        return Model(cfg, init, apply_train, prefill_fn, decode_fn,
+                     init_cache)
+
+    def init(rng):
+        return transformer.init_params(rng, cfg)
+
+    def apply_train(policy, params, *, tokens, vision_embeds=None):
+        return transformer.apply_train(cfg, policy, params, tokens,
+                                       vision_embeds)
+
+    def prefill_fn(policy, params, cache_len, *, tokens, vision_embeds=None):
+        return transformer.prefill(cfg, policy, params, tokens, cache_len,
+                                   vision_embeds)
+
+    def decode_fn(policy, params, token, caches, pos):
+        return transformer.decode_step(cfg, policy, params, token, caches,
+                                       pos)
+
+    def init_cache(batch, cache_len):
+        return transformer.init_cache(cfg, batch, cache_len)
+
+    return Model(cfg, init, apply_train, prefill_fn, decode_fn, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# Input specs per shape cell (dry-run stand-ins; no device allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, *, concrete: bool = False,
+                batch_override: Optional[int] = None,
+                seq_override: Optional[int] = None) -> dict[str, Any]:
+    """Model inputs for one cell, as ShapeDtypeStructs (or zeros if
+    ``concrete`` — used by smoke tests at reduced sizes).
+
+    train/prefill: full-sequence inputs (+labels for train).
+    decode: single token + positions; the CACHE spec comes from
+    ``cache_specs`` below.
+    """
+    b = batch_override or shape.global_batch
+    s = seq_override or shape.seq_len
+
+    def arr(shp, dtype):
+        if concrete:
+            return jnp.zeros(shp, dtype)
+        return jax.ShapeDtypeStruct(shp, dtype)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            s_text = s - cfg.n_vision_tokens
+            assert s_text > 0, "shape too small for vision tokens"
+            batch = {
+                "tokens": arr((b, s_text), jnp.int32),
+                "vision_embeds": arr((b, cfg.n_vision_tokens, cfg.d_model),
+                                     COMPUTE_DTYPE),
+            }
+        elif cfg.family == "encdec":
+            batch = {
+                "tokens": arr((b, s), jnp.int32),
+                "frames": arr((b, cfg.enc_seq, cfg.d_model), COMPUTE_DTYPE),
+            }
+        else:
+            batch = {"tokens": arr((b, s), jnp.int32)}
+        if shape.kind == "train":
+            batch["labels"] = arr(
+                (b, s if cfg.family != "vlm" else s - cfg.n_vision_tokens),
+                jnp.int32)
+        return batch
+    if shape.kind == "decode":
+        return {
+            "token": arr((b, 1), jnp.int32),
+            "pos": arr((b,), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+def effective_cache_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Rolling-buffer truncation for windowed archs (DESIGN.md §5)."""
+    s = shape.seq_len
+    if cfg.family == "hybrid" and cfg.local_window:
+        return min(s, cfg.local_window)
+    if cfg.sliding_window:
+        return min(s, cfg.sliding_window)
+    return s
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec,
+                batch_override: Optional[int] = None):
+    """ShapeDtypeStructs of the decode cache via eval_shape (no alloc)."""
+    model = build(cfg)
+    b = batch_override or shape.global_batch
+    clen = effective_cache_len(cfg, shape)
+    return jax.eval_shape(lambda: model.init_cache(b, clen))

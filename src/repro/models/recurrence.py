@@ -1,0 +1,168 @@
+"""Recurrence substrate for the SSM/hybrid families.
+
+Two engines, both exact (tests pin them against naive sequential scans):
+
+  * ``chunked_diag_recurrence`` — h_t = a_t ⊙ h_{t-1} + b_t over (T, B, D),
+    evaluated as lax.scan over chunks with an associative scan inside each
+    chunk. Only chunk-boundary states live across iterations, bounding
+    memory at O(C·B·D); the chunk loop is a declared 'chunks' roofline
+    scale-dim (DESIGN.md §6). Used by RG-LRU.
+
+  * ``chunked_matrix_recurrence`` — GLA/RWKV-style matrix-state recurrence
+      S_t = diag(w_t) S_{t-1} + k_t^T v_t,   o_t = r_t·S_{t-1} + (r_t⊙u⊙k_t)·v_t
+    evaluated chunk-parallel: intra-chunk pairwise decay ratios are computed
+    in log space where every exponent is ≤ 0 (la is monotone decreasing), so
+    the form is numerically stable without GLA's secondary chunking. The
+    (C, C, Dk) relative-decay tensor is materialised per chunk — chunk size
+    bounds VMEM/HBM temp, default 32. Turns the recurrence into MXU matmuls
+    instead of T outer-product steps. Used by RWKV6.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pad_time(x, chunk):
+    t = x.shape[0]
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x, t
+
+
+def diag_recurrence_ref(a, b, h0):
+    """Naive sequential oracle. a, b: (T, B, D); h0: (B, D)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    hT, hs = jax.lax.scan(step, h0, (a, b))
+    return hs, hT
+
+
+def _scan_chunks(step, init, xs, *, unroll):
+    """lax.scan over chunk tuples, or a Python loop when ``unroll`` —
+    the roofline probes unroll so cost_analysis counts every chunk
+    (while bodies are counted once; DESIGN.md §6)."""
+    if not unroll:
+        return jax.lax.scan(step, init, xs)
+    carry, ys = init, []
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    for i in range(n):
+        carry, y = step(carry, jax.tree.map(lambda x: x[i], xs))
+        ys.append(y)
+    return carry, jnp.concatenate([y[None] for y in ys], axis=0)
+
+
+def chunked_diag_recurrence(a, b, h0, *, chunk=256, unroll=False):
+    """Exact chunked evaluation of h_t = a_t h_{t-1} + b_t.
+
+    a, b: (T, B, D) — a in (0, 1]; h0: (B, D). Returns (hs (T,B,D), hT).
+    """
+    (a_p, t_orig) = _pad_time(a, chunk)
+    # padded steps must be identity: a=1, b=0
+    if a_p.shape[0] != a.shape[0]:
+        pad = a_p.shape[0] - a.shape[0]
+        ones = jnp.ones((pad,) + a.shape[1:], a.dtype)
+        a_p = jnp.concatenate([a, ones], axis=0)
+    b_p, _ = _pad_time(b, chunk)
+    k = a_p.shape[0] // chunk
+    a_c = a_p.reshape(k, chunk, *a.shape[1:])
+    b_c = b_p.reshape(k, chunk, *b.shape[1:])
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, bx * ay + by
+
+    def chunk_step(h, ab):
+        ac, bc = ab
+        # associative scan within the chunk (log-depth, fully counted HLO)
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=0)
+        hs = aa * h[None] + bb
+        return hs[-1], hs
+
+    hT, hs = _scan_chunks(chunk_step, h0, (a_c, b_c), unroll=unroll)
+    hs = hs.reshape(k * chunk, *a.shape[1:])[:t_orig]
+    return hs, hT
+
+
+def matrix_recurrence_ref(r, k, v, w, u, s0):
+    """Naive oracle.  r,k,w: (T,B,H,Dk); v: (T,B,H,Dv); u: (H,Dk);
+    s0: (B,H,Dk,Dv).  Returns (o (T,B,H,Dv), sT)."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,Dk,Dv)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s) + jnp.einsum(
+            "bhk,hk,bhkv->bhv", rt, u, kv)
+        s = wt[..., None] * s + kv
+        return s, o
+    sT, o = jax.lax.scan(step, s0, (r, k, v, w))
+    return o, sT
+
+
+def chunked_matrix_recurrence(r, k, v, w, u, s0, *, chunk=32, unroll=False):
+    """Exact chunk-parallel evaluation of the RWKV6 recurrence (fp32 core).
+
+    Shapes as in ``matrix_recurrence_ref``. All decay exponents are computed
+    as within-chunk differences la_i - la_j with i ≥ j ⇒ exponent ≤ 0.
+    """
+    t, b, h, dk = r.shape
+    dv = v.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        z = lambda x: jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], 0)
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.concatenate([w, jnp.ones((pad,) + w.shape[1:], w.dtype)], 0)
+    n = r.shape[0] // chunk
+    rc = r.reshape(n, chunk, b, h, dk).astype(jnp.float32)
+    kc = k.reshape(n, chunk, b, h, dk).astype(jnp.float32)
+    vc = v.reshape(n, chunk, b, h, dv).astype(jnp.float32)
+    wc = w.reshape(n, chunk, b, h, dk).astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def chunk_step(s, inp):
+        rt, kt, vt, wt = inp                               # (C,B,H,·)
+        la = jnp.cumsum(jnp.log(jnp.maximum(wt, 1e-30)), axis=0)  # (C,B,H,Dk)
+        la_prev = la - jnp.log(jnp.maximum(wt, 1e-30))     # la_{t-1}
+        # cross-chunk contribution: o_t += (r_t ⊙ a_{t-1}) S_0
+        q_tilde = rt * jnp.exp(la_prev)
+        o = jnp.einsum("cbhk,bhkv->cbhv", q_tilde, s)
+        # intra-chunk: P[t,τ] = Σ_d r_td k_τd exp(la_prev[t,d] - la[τ,d]), τ<t
+        diff = la_prev[:, None] - la[None, :]              # (C,C,B,H,Dk) ≤ 0 for τ<t
+        tt = jnp.arange(chunk)
+        causal = (tt[:, None] > tt[None, :])
+        diff = jnp.where(causal[:, :, None, None, None], diff, 0.0)
+        pmat = jnp.einsum("cbhk,sbhk,csbhk->csbh", rt, kt, jnp.exp(diff))
+        pmat = jnp.where(causal[:, :, None, None], pmat, 0.0)
+        o = o + jnp.einsum("csbh,sbhv->cbhv", pmat, vt)
+        # diagonal bonus term: ((r_t ⊙ u) · k_t) v_t
+        diag = jnp.einsum("cbhk,hk,cbhk->cbh", rt, uf, kt)
+        o = o + diag[..., None] * vt
+        # state update to chunk end: S' = diag(a_C) S + Σ_τ diag(a_C/a_τ) k_τ v_τ
+        a_end = jnp.exp(la[-1])                            # (B,H,Dk)
+        k_scaled = kt * jnp.exp(la[-1][None] - la)         # (C,B,H,Dk), exp ≤ 1
+        s_new = a_end[..., None] * s + jnp.einsum(
+            "cbhk,cbhv->bhkv", k_scaled, vt)
+        return s_new, o
+
+    sT, o = _scan_chunks(chunk_step, s0.astype(jnp.float32),
+                         (rc, kc, vc, wc), unroll=unroll)
+    o = o.reshape(n * chunk, b, h, dv)[:t]
+    return o.astype(v.dtype), sT
+
+
+def matrix_recurrence_step(r, k, v, w, u, s):
+    """Single decode step. r,k,w: (B,H,Dk); v: (B,H,Dv); s: (B,H,Dk,Dv)."""
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    kv = k[..., :, None] * v32[..., None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", r, s) + jnp.einsum(
+        "bhk,hk,bhkv->bhv", r, u.astype(jnp.float32), kv)
+    s = w[..., None] * s + kv
+    return o.astype(v.dtype), s

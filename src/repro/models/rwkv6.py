@@ -1,0 +1,190 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): data-dependent decay, attention-free.
+
+TimeMix with DDLERP token-shift mixing + LoRA-modulated per-channel decay,
+matrix-state recurrence (models/recurrence.py chunked engine), grouped
+per-head output norm; ChannelMix with squared-relu. LayerNorms as in the
+reference implementation.
+
+Decode state per layer: {"tm_shift": (B,d), "cm_shift": (B,d),
+"wkv": (B,H,Dk,Dv)} — O(d + H·Dk·Dv) per token, no KV cache; this is why
+rwkv6 is a ``long_500k`` architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, init_layernorm, layernorm
+from repro.models.recurrence import (
+    chunked_matrix_recurrence,
+    matrix_recurrence_step,
+)
+from repro.sharding import Policy
+
+LORA_R = 64
+DDLERP_R = 32
+
+
+def init_timemix(rng, d, n_heads, head_dim, dtype=jnp.float32):
+    ks = jax.random.split(rng, 12)
+    u = 0.5 * jax.random.uniform(ks[0], (n_heads, head_dim))
+    return {
+        "mu_x": jnp.zeros((d,), jnp.float32),
+        "mu": jnp.zeros((5, d), jnp.float32),            # w,k,v,r,g bases
+        "ddlerp_a": dense_init(ks[1], d, 5 * DDLERP_R, dtype),
+        "ddlerp_b": 0.01 * jax.random.normal(ks[2], (5, DDLERP_R, d), dtype),
+        "w0": jnp.tile(jnp.linspace(-6.0, -1.0, head_dim), n_heads),
+        "lora_w_a": dense_init(ks[3], d, LORA_R, dtype),
+        "lora_w_b": 0.01 * jax.random.normal(ks[4], (LORA_R, d), dtype),
+        "u": u,                                           # per-head bonus
+        "w_r": dense_init(ks[5], d, d, dtype),
+        "w_k": dense_init(ks[6], d, d, dtype),
+        "w_v": dense_init(ks[7], d, d, dtype),
+        "w_g": dense_init(ks[8], d, d, dtype),
+        "w_o": dense_init(ks[9], d, d, dtype),
+        "out_norm": {"scale": jnp.ones((n_heads, head_dim), jnp.float32),
+                     "bias": jnp.zeros((n_heads, head_dim), jnp.float32)},
+    }
+
+
+def init_channelmix(rng, d, d_ff, dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    return {
+        "mu_k": jnp.zeros((d,), jnp.float32),
+        "mu_r": jnp.zeros((d,), jnp.float32),
+        "w_k": dense_init(ks[0], d, d_ff, dtype),
+        "w_v": dense_init(ks[1], d_ff, d, dtype),
+        "w_r": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def init_rwkv_block(rng, d, d_ff, n_heads, head_dim, dtype=jnp.float32):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": init_layernorm(d),
+        "ln2": init_layernorm(d),
+        "rwkv": {"tm": init_timemix(k1, d, n_heads, head_dim, dtype),
+                 "cm": init_channelmix(k2, d, d_ff, dtype)},
+    }
+
+
+def _group_norm(p, x):
+    """Per-head layernorm of (…, H, Dh)."""
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    xhat = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+    return xhat * p["scale"] + p["bias"]
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    base = x + xx * p["mu_x"].astype(x.dtype)
+    lo = jnp.tanh(base @ p["ddlerp_a"].astype(x.dtype))
+    lo = lo.reshape(*x.shape[:-1], 5, DDLERP_R)
+    adj = jnp.einsum("...fr,frd->...fd", lo, p["ddlerp_b"].astype(x.dtype))
+    mixed = x[..., None, :] + xx[..., None, :] * (
+        p["mu"].astype(x.dtype) + adj)
+    return [mixed[..., i, :] for i in range(5)]           # each (…, d)
+
+
+def _decay(p, xw, n_heads, head_dim):
+    """Per-channel data-dependent decay w_t ∈ (0,1)."""
+    lo = jnp.tanh(xw @ p["lora_w_a"].astype(xw.dtype)) @ p["lora_w_b"].astype(xw.dtype)
+    wlog = p["w0"].astype(jnp.float32) + lo.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog))
+    return w.reshape(*xw.shape[:-1], n_heads, head_dim)
+
+
+def timemix_seq(p, x, shift_in, s0, *, n_heads, head_dim, chunk, policy,
+                unroll=False):
+    """x: (B, T, d). shift_in: (B, d) last token of previous segment.
+    Returns (out, (last_x, sT))."""
+    b, t, d = x.shape
+    prev = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    xx = prev - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xx)
+    r = (xr @ p["w_r"].astype(x.dtype)).reshape(b, t, n_heads, head_dim)
+    k = (xk @ p["w_k"].astype(x.dtype)).reshape(b, t, n_heads, head_dim)
+    v = (xv @ p["w_v"].astype(x.dtype)).reshape(b, t, n_heads, head_dim)
+    g = xg @ p["w_g"].astype(x.dtype)
+    w = _decay(p, xw, n_heads, head_dim)                  # (B,T,H,Dh) fp32
+    tbhd = lambda z: z.swapaxes(0, 1)                     # (T,B,H,Dh)
+    o, sT = chunked_matrix_recurrence(
+        tbhd(r), tbhd(k), tbhd(v), tbhd(w), p["u"], s0, chunk=chunk,
+        unroll=unroll)
+    o = o.swapaxes(0, 1)                                  # (B,T,H,Dh)
+    o = _group_norm(p["out_norm"], o.astype(jnp.float32)).astype(x.dtype)
+    o = (o.reshape(b, t, d) * jax.nn.silu(g))
+    out = o @ p["w_o"].astype(x.dtype)
+    return out, (x[:, -1], sT)
+
+
+def timemix_step(p, x, shift_in, s, *, n_heads, head_dim):
+    """Single-token decode. x: (B, d)."""
+    b, d = x.shape
+    xx = shift_in - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xx)
+    r = (xr @ p["w_r"].astype(x.dtype)).reshape(b, n_heads, head_dim)
+    k = (xk @ p["w_k"].astype(x.dtype)).reshape(b, n_heads, head_dim)
+    v = (xv @ p["w_v"].astype(x.dtype)).reshape(b, n_heads, head_dim)
+    g = xg @ p["w_g"].astype(x.dtype)
+    w = _decay(p, xw, n_heads, head_dim)
+    o, sT = matrix_recurrence_step(r, k, v, w, p["u"], s)
+    o = _group_norm(p["out_norm"], o.astype(jnp.float32)).astype(x.dtype)
+    out = (o.reshape(b, d) * jax.nn.silu(g)) @ p["w_o"].astype(x.dtype)
+    return out, (x, sT)
+
+
+def channelmix_seq(p, x, shift_in):
+    prev = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    xx = prev - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(x.dtype)))
+    kv = k @ p["w_v"].astype(x.dtype)
+    return jax.nn.sigmoid(xr @ p["w_r"].astype(x.dtype)) * kv, x[:, -1]
+
+
+def channelmix_step(p, x, shift_in):
+    xx = shift_in - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(x.dtype)))
+    kv = k @ p["w_v"].astype(x.dtype)
+    return jax.nn.sigmoid(xr @ p["w_r"].astype(x.dtype)) * kv, x
+
+
+def rwkv_block_seq(p, x, state, *, n_heads, head_dim, chunk,
+                   policy: Policy, unroll=False):
+    """state: {"tm_shift", "cm_shift", "wkv"}; x: (B, T, d)."""
+    h = layernorm(p["ln1"], x)
+    o, (tm_shift, wkv) = timemix_seq(
+        p["rwkv"]["tm"], h, state["tm_shift"], state["wkv"],
+        n_heads=n_heads, head_dim=head_dim, chunk=chunk, policy=policy,
+        unroll=unroll)
+    x = x + o
+    h = layernorm(p["ln2"], x)
+    o, cm_shift = channelmix_seq(p["rwkv"]["cm"], h, state["cm_shift"])
+    x = x + o
+    return x, {"tm_shift": tm_shift, "cm_shift": cm_shift, "wkv": wkv}
+
+
+def rwkv_block_step(p, x, state, *, n_heads, head_dim, policy: Policy):
+    """x: (B, d) single token."""
+    h = layernorm(p["ln1"], x)
+    o, (tm_shift, wkv) = timemix_step(
+        p["rwkv"]["tm"], h, state["tm_shift"], state["wkv"],
+        n_heads=n_heads, head_dim=head_dim)
+    x = x + o
+    h = layernorm(p["ln2"], x)
+    o, cm_shift = channelmix_step(p["rwkv"]["cm"], h, state["cm_shift"])
+    x = x + o
+    return x, {"tm_shift": tm_shift, "cm_shift": cm_shift, "wkv": wkv}
+
+
+def init_rwkv_state(batch, d, n_heads, head_dim, dtype=jnp.bfloat16):
+    return {
+        "tm_shift": jnp.zeros((batch, d), dtype),
+        "cm_shift": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+    }

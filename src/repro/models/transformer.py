@@ -1,0 +1,423 @@
+"""Decoder-only LM assembly: dense / moe / vlm / ssm / hybrid families.
+
+Layer stacks are ``lax.scan``s over stacked params (MaxText-style): the HLO
+contains ONE layer body per distinct block kind regardless of depth — this
+keeps 80-layer dry-run compiles tractable and is also how the roofline
+harness recovers per-layer costs (DESIGN.md §6).
+
+API (all pure functions; ``policy`` carries sharding constraints):
+  init_params(rng, cfg)                     → params pytree
+  apply_train(cfg, policy, params, batch)   → (logits, aux)
+  prefill(cfg, policy, params, tokens, cache_len, …) → (logits_last, cache)
+  decode_step(cfg, policy, params, token, cache, pos) → (logits, cache)
+  init_cache(cfg, batch, cache_len)         → cache pytree
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import griffin as griffin_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.common import (
+    dense_init,
+    embed,
+    init_embed,
+    init_layernorm,
+    init_rmsnorm,
+    layernorm,
+    rmsnorm,
+    unembed,
+)
+from repro.models.mlp import init_mlp, mlp
+from repro.models.moe import init_moe, moe_block
+from repro.sharding import Policy
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _norm_fns(cfg):
+    if cfg.norm == "layernorm":
+        return init_layernorm, functools.partial(layernorm, eps=cfg.norm_eps)
+    return init_rmsnorm, functools.partial(rmsnorm, eps=cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Block init/apply by kind
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_block(rng, cfg: ModelConfig, *, mixer: str):
+    """mixer: 'mlp' or 'moe'."""
+    init_norm, _ = _norm_fns(cfg)
+    k1, k2 = jax.random.split(rng)
+    p = {
+        "norm1": init_norm(cfg.d_model),
+        "norm2": init_norm(cfg.d_model),
+        "attn": attn_mod.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm),
+    }
+    if mixer == "moe":
+        p["moe"] = init_moe(
+            k2, cfg.d_model, cfg.d_ff_expert or cfg.d_ff, cfg.n_experts,
+            n_shared=cfg.n_shared_experts, d_ff_shared=cfg.d_ff_shared)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff,
+                            gated=(cfg.act == "silu"))
+    return p
+
+
+def _init_rec_block(rng, cfg: ModelConfig):
+    init_norm, _ = _norm_fns(cfg)
+    k1, k2 = jax.random.split(rng)
+    return {
+        "norm1": init_norm(cfg.d_model),
+        "norm2": init_norm(cfg.d_model),
+        "rec": griffin_mod.init_recurrent_block(
+            k1, cfg.d_model, cfg.d_rnn or cfg.d_model),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, gated=True),
+    }
+
+
+def _attn_block_seq(p, cfg, policy, x, positions, cache, *, window, mixer,
+                    decode=False):
+    """Returns (x, new_cache, aux). cache may be None (train)."""
+    _, norm = _norm_fns(cfg)
+    h = norm(p["norm1"], x)
+    if decode:
+        o, cache = attn_mod.decode_attend(
+            p["attn"], h, cache, positions, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+            rope_theta=cfg.rope_theta, window=window, policy=policy)
+    else:
+        o, (k, v) = attn_mod.attend(
+            p["attn"], h, positions, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+            rope_theta=cfg.rope_theta, kind="causal", window=window,
+            policy=policy, dense_max_seq=cfg.dense_attn_max,
+            kv_block=cfg.kv_block)
+        if cache is not None:
+            cache = attn_mod.cache_from_prefill(
+                k, v, positions, cache["k"].shape[2])  # (B,Hkv,S,Dh)
+    x = x + o
+    x = policy.act_residual(x)
+    h = norm(p["norm2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if mixer == "moe":
+        o, aux = moe_block(
+            p["moe"], h, top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            act=cfg.act, policy=policy, dispatch=cfg.moe_dispatch,
+            normalize=cfg.normalize_topk)
+    else:
+        o = mlp(p["mlp"], h, act=cfg.act, policy=policy)
+    x = x + o
+    x = policy.act_residual(x)
+    return x, cache, aux
+
+
+def _rec_block_seq(p, cfg, policy, x, state, *, decode=False):
+    _, norm = _norm_fns(cfg)
+    h = norm(p["norm1"], x)
+    if decode:
+        o, state = griffin_mod.recurrent_block_step(p["rec"], h[:, 0], state,
+                                                    policy=policy)
+        o = o[:, None]
+    else:
+        o, state = griffin_mod.recurrent_block_seq(
+            p["rec"], h, state, chunk=cfg.rnn_chunk, policy=policy,
+            unroll=not cfg.use_scan)
+    x = x + o
+    x = policy.act_residual(x)
+    h = norm(p["norm2"], x)
+    x = x + mlp(p["mlp"], h, act=cfg.act, policy=policy)
+    x = policy.act_residual(x)
+    return x, state
+
+
+# ---------------------------------------------------------------------------
+# Layer-stack plans per family
+# ---------------------------------------------------------------------------
+
+
+def _plan(cfg: ModelConfig):
+    """Returns (scan_kinds, n_scan, tail_kinds). scan_kinds is the block-kind
+    tuple of one scan group; the group repeats n_scan times; tail_kinds are
+    unrolled trailing blocks (hybrid depth not divisible by the pattern)."""
+    if cfg.family in ("dense", "vlm"):
+        return ("attn_mlp",), cfg.n_layers, ()
+    if cfg.family == "moe":
+        return ("attn_moe",), cfg.n_layers, ()
+    if cfg.family == "ssm":
+        return ("rwkv",), cfg.n_layers, ()
+    if cfg.family == "hybrid":
+        pat = cfg.pattern or ("rec", "rec", "attn")
+        kinds = tuple("attn_mlp" if k == "attn" else "rec_mlp" for k in pat)
+        n = cfg.n_layers // len(pat)
+        tail_n = cfg.n_layers - n * len(pat)
+        return kinds, n, kinds[:tail_n]
+    raise ValueError(cfg.family)
+
+
+def _init_block(rng, cfg, kind):
+    if kind == "attn_mlp":
+        return _init_attn_block(rng, cfg, mixer="mlp")
+    if kind == "attn_moe":
+        return _init_attn_block(rng, cfg, mixer="moe")
+    if kind == "rwkv":
+        return rwkv_mod.init_rwkv_block(
+            rng, cfg.d_model, cfg.d_ff, cfg.rwkv_heads, cfg.rwkv_head_dim)
+    if kind == "rec_mlp":
+        return _init_rec_block(rng, cfg)
+    raise ValueError(kind)
+
+
+def init_params(rng, cfg: ModelConfig):
+    kinds, n_scan, tail = _plan(cfg)
+    k_embed, k_layers, k_tail, k_head = jax.random.split(rng, 4)
+    group_init = lambda r: {
+        f"b{i}_{kind}": _init_block(jax.random.fold_in(r, i), cfg, kind)
+        for i, kind in enumerate(kinds)
+    }
+    layers = jax.vmap(group_init)(jax.random.split(k_layers, n_scan))
+    init_norm, _ = _norm_fns(cfg)
+    params = {
+        "embed": init_embed(k_embed, cfg.vocab, cfg.d_model),
+        "layers": layers,
+        "final_norm": init_norm(cfg.d_model),
+    }
+    if tail:
+        params["tail"] = [
+            _init_block(jax.random.fold_in(k_tail, i), cfg, kind)
+            for i, kind in enumerate(tail)
+        ]
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches / recurrent state
+# ---------------------------------------------------------------------------
+
+
+def _init_block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
+    if kind in ("attn_mlp", "attn_moe"):
+        window = _window_for(cfg, kind)
+        clen = min(cache_len, window) if window else cache_len
+        return attn_mod.init_cache(batch, clen, cfg.n_kv_heads, cfg.head_dim_)
+    if kind == "rwkv":
+        return rwkv_mod.init_rwkv_state(
+            batch, cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim)
+    if kind == "rec_mlp":
+        return griffin_mod.init_griffin_state(batch, cfg.d_rnn or cfg.d_model)
+    raise ValueError(kind)
+
+
+def _window_for(cfg: ModelConfig, kind: str):
+    if cfg.family == "hybrid":
+        return cfg.local_window
+    return cfg.sliding_window
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    kinds, n_scan, tail = _plan(cfg)
+    group = {
+        f"b{i}_{kind}": _init_block_cache(cfg, kind, batch, cache_len)
+        for i, kind in enumerate(kinds)
+    }
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_scan,) + x.shape).copy(), group)
+    out = {"layers": stacked}
+    if tail:
+        out["tail"] = [
+            _init_block_cache(cfg, kind, batch, cache_len)
+            for kind in tail
+        ]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(p, cfg, policy, kind, x, positions, cache, decode):
+    if kind in ("attn_mlp", "attn_moe"):
+        mixer = "moe" if kind == "attn_moe" else "mlp"
+        return _attn_block_seq(p, cfg, policy, x, positions, cache,
+                               window=_window_for(cfg, kind), mixer=mixer,
+                               decode=decode)
+    if kind == "rwkv":
+        if cache is None:  # training: fresh zero state
+            cache = rwkv_mod.init_rwkv_state(
+                x.shape[0], cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim)
+        x, st = (rwkv_mod.rwkv_block_step(
+            p, x[:, 0], cache, n_heads=cfg.rwkv_heads,
+            head_dim=cfg.rwkv_head_dim, policy=policy)
+            if decode else
+            rwkv_mod.rwkv_block_seq(
+                p, x, cache, n_heads=cfg.rwkv_heads,
+                head_dim=cfg.rwkv_head_dim, chunk=cfg.rwkv_chunk,
+                policy=policy, unroll=not cfg.use_scan))
+        if decode:
+            x = x[:, None]
+        return x, st, jnp.zeros((), jnp.float32)
+    if kind == "rec_mlp":
+        if cache is None:  # training: fresh zero state
+            cache = griffin_mod.init_griffin_state(
+                x.shape[0], cfg.d_rnn or cfg.d_model)
+        x, st = _rec_block_seq(p, cfg, policy, x, cache, decode=decode)
+        return x, st, jnp.zeros((), jnp.float32)
+    raise ValueError(kind)
+
+
+def _run_stack(cfg, policy, params, x, positions, caches, decode):
+    """Scan over the layer stack; returns (x, new_caches, aux_sum)."""
+    kinds, n_scan, tail = _plan(cfg)
+
+    def group_body(carry, inp):
+        x, aux = carry
+        p_group, c_group = inp
+        new_caches = {}
+        for i, kind in enumerate(kinds):
+            key = f"b{i}_{kind}"
+            cache_i = None if c_group is None else c_group[key]
+            x, new_c, a = _apply_block(
+                p_group[key], cfg, policy, kind, x, positions, cache_i,
+                decode)
+            new_caches[key] = new_c if new_c is not None else 0
+            aux = aux + a
+        return (x, aux), new_caches
+
+    body = group_body
+    if cfg.remat and not decode:
+        body = jax.checkpoint(group_body)
+
+    def scan_or_unroll(body_fn, init, xs, length):
+        if cfg.use_scan:
+            return jax.lax.scan(body_fn, init, xs)
+        carry, ys = init, []
+        for i in range(length):
+            x_i = jax.tree.map(lambda a: a[i], xs)
+            carry, y = body_fn(carry, x_i)
+            ys.append(y)
+        stack = (jax.tree.map(lambda *a: jnp.stack(a), *ys)
+                 if ys and ys[0] is not None else None)
+        return carry, stack
+
+    kinds_n = n_scan
+    if caches is None:
+        def body_nocache(carry, p_group):
+            return body(carry, (p_group, None))
+        (x, aux), _ = scan_or_unroll(
+            body_nocache, (x, jnp.zeros((), jnp.float32)), params["layers"],
+            kinds_n)
+        new_layer_caches = None
+    elif decode:
+        # Decode memory discipline: the stacked cache lives in the scan
+        # CARRY with per-layer dynamic in-place updates. XLA aliases while
+        # carries, so exactly ONE cache buffer exists. Passing it as xs/ys
+        # keeps TWO (input stack + output stack) — measured +9 GiB/device
+        # on qwen2-72b decode_32k (EXPERIMENTS.md §Perf, iteration 0b).
+        stacked = caches["layers"]
+
+        def decode_body(carry, p_group):
+            x, aux, cs, i = carry
+            c_group = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, i, 0,
+                                                       keepdims=False), cs)
+            (x, aux), new_group = body((x, aux), (p_group, c_group))
+            cs = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), i, 0), cs, new_group)
+            return (x, aux, cs, i + 1), None
+
+        if cfg.use_scan:
+            (x, aux, stacked, _), _ = jax.lax.scan(
+                decode_body,
+                (x, jnp.zeros((), jnp.float32), stacked,
+                 jnp.zeros((), jnp.int32)), params["layers"])
+        else:
+            carry = (x, jnp.zeros((), jnp.float32), stacked,
+                     jnp.zeros((), jnp.int32))
+            for i in range(kinds_n):
+                carry, _ = decode_body(
+                    carry, jax.tree.map(lambda a: a[i], params["layers"]))
+            x, aux, stacked, _ = carry
+        new_layer_caches = stacked
+    else:
+        (x, aux), new_layer_caches = scan_or_unroll(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["layers"], caches["layers"]), kinds_n)
+
+    new_tail = []
+    if tail:
+        for i, kind in enumerate(tail):
+            c = None if caches is None else caches["tail"][i]
+            x, new_c, a = _apply_block(
+                params["tail"][i], cfg, policy, kind, x, positions, c, decode)
+            aux = aux + a
+            new_tail.append(new_c)
+
+    if caches is None:
+        return x, None, aux
+    out_caches = {"layers": new_layer_caches}
+    if tail:
+        out_caches["tail"] = new_tail
+    return x, out_caches, aux
+
+
+def _embed_inputs(cfg, policy, params, tokens, vision_embeds=None):
+    x = embed(params["embed"], tokens, COMPUTE_DTYPE)
+    if cfg.family == "vlm" and vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(COMPUTE_DTYPE), x], axis=1)
+    return policy.act_residual(x)
+
+
+def _logits(cfg, params, x):
+    _, norm = _norm_fns(cfg)
+    x = norm(params["final_norm"], x)
+    return unembed(params["embed"], params.get("lm_head"), x)
+
+
+def apply_train(cfg: ModelConfig, policy: Policy, params, tokens,
+                vision_embeds=None):
+    """tokens: (B, S_text) int32 → (logits (B, S, V) fp32, aux)."""
+    x = _embed_inputs(cfg, policy, params, tokens, vision_embeds)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, _, aux = _run_stack(cfg, policy, params, x, positions, None,
+                           decode=False)
+    logits = _logits(cfg, params, x)
+    return logits.astype(jnp.float32), aux
+
+
+def prefill(cfg: ModelConfig, policy: Policy, params, tokens, cache_len,
+            vision_embeds=None):
+    """Full-sequence inference producing the KV/recurrent cache.
+
+    Returns (last-position logits (B, V), caches)."""
+    x = _embed_inputs(cfg, policy, params, tokens, vision_embeds)
+    b, s = x.shape[:2]
+    positions = jnp.arange(s)[None, :]
+    caches = init_cache(cfg, b, cache_len)
+    x, caches, _ = _run_stack(cfg, policy, params, x, positions, caches,
+                              decode=False)
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits[:, 0].astype(jnp.float32), caches
+
+
+def decode_step(cfg: ModelConfig, policy: Policy, params, token, caches, pos):
+    """token: (B, 1) int32; pos: (B,) absolute positions.
+
+    Returns (logits (B, V), new caches)."""
+    x = embed(params["embed"], token, COMPUTE_DTYPE)
+    x, caches, _ = _run_stack(cfg, policy, params, x, pos[:, None], caches,
+                              decode=True)
+    logits = _logits(cfg, params, x)
+    return logits[:, 0].astype(jnp.float32), caches

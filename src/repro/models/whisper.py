@@ -1,0 +1,281 @@
+"""Whisper-medium backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+Per the assignment spec, the conv/audio frontend is a STUB — ``input_specs``
+provides precomputed frame embeddings (B, enc_seq, d). The encoder adds
+sinusoidal positions and runs full (bidirectional) attention; the decoder is
+a standard causal transformer with cross-attention to encoder output and
+learned positions. GELU MLPs, pre-LayerNorm (faithful to the reference).
+
+Shape-cell note (DESIGN.md §5): prefill/decode shapes exercise the DECODER
+sequence; position tables are sized from the requested shape. Decode caches:
+self-attn KV (cache_len) + precomputed cross-attn KV (enc_seq).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.common import (
+    dense_init,
+    embed,
+    init_embed,
+    init_layernorm,
+    layernorm,
+    sinusoidal_positions,
+)
+from repro.models.mlp import init_mlp, mlp
+from repro.sharding import Policy
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _init_enc_layer(rng, cfg):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "norm1": init_layernorm(cfg.d_model),
+        "norm2": init_layernorm(cfg.d_model),
+        "attn": attn_mod.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def _init_dec_layer(rng, cfg):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "norm1": init_layernorm(cfg.d_model),
+        "norm_x": init_layernorm(cfg.d_model),
+        "norm2": init_layernorm(cfg.d_model),
+        "attn": attn_mod.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_),
+        "xattn": attn_mod.init_attention(
+            k2, cfg.d_model, cfg.n_heads, cfg.n_heads, cfg.head_dim_),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def _padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab padded to a multiple of 128 so the TP axis divides it
+    (Megatron-style; whisper's 51865 is 5·11·23·41). Padded logit columns
+    are masked to -inf before softmax/argmax."""
+    return ((cfg.vocab + 127) // 128) * 128
+
+
+def _mask_pad_logits(cfg: ModelConfig, logits):
+    v_pad = logits.shape[-1]
+    if v_pad == cfg.vocab:
+        return logits
+    ok = jnp.arange(v_pad) < cfg.vocab
+    return jnp.where(ok, logits, jnp.asarray(-2.0 ** 30, logits.dtype))
+
+
+def init_params(rng, cfg: ModelConfig, max_dec_positions: int = 4096):
+    ke, kd, kt, kp = jax.random.split(rng, 4)
+    enc = jax.vmap(lambda r: _init_enc_layer(r, cfg))(
+        jax.random.split(ke, cfg.n_enc_layers))
+    dec = jax.vmap(lambda r: _init_dec_layer(r, cfg))(
+        jax.random.split(kd, cfg.n_layers))
+    return {
+        "embed": init_embed(kt, _padded_vocab(cfg), cfg.d_model),
+        "pos_embed": 0.01 * jax.random.normal(
+            kp, (max_dec_positions, cfg.d_model)),
+        "enc_layers": enc,
+        "enc_norm": init_layernorm(cfg.d_model),
+        "layers": dec,
+        "final_norm": init_layernorm(cfg.d_model),
+    }  # whisper ties the unembedding to the token embedding
+
+
+def encode(cfg: ModelConfig, policy: Policy, params, frames):
+    """frames: (B, enc_seq, d) stub embeddings → encoder states."""
+    s = frames.shape[1]
+    x = frames.astype(COMPUTE_DTYPE) + sinusoidal_positions(
+        s, cfg.d_model).astype(COMPUTE_DTYPE)[None]
+    x = policy.act_residual(x)
+    positions = jnp.arange(s)[None, :]
+
+    def body(x, p):
+        h = layernorm(p["norm1"], x)
+        o, _ = attn_mod.attend(
+            p["attn"], h, positions, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+            rope_theta=cfg.rope_theta, kind="full", use_rope=False,
+            policy=policy, dense_max_seq=cfg.dense_attn_max)
+        x = x + o
+        h = layernorm(p["norm2"], x)
+        x = x + mlp(p["mlp"], h, act="gelu", policy=policy)
+        return policy.act_residual(x), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.use_scan:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:
+        for i in range(cfg.n_enc_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i],
+                                        params["enc_layers"]))
+    return layernorm(params["enc_norm"], x)
+
+
+def _dec_block(p, cfg, policy, x, positions, enc_kv, cache, decode):
+    h = layernorm(p["norm1"], x)
+    if decode:
+        o, cache = attn_mod.decode_attend(
+            p["attn"], h, cache, positions, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+            rope_theta=cfg.rope_theta, window=None, use_rope=False,
+            policy=policy)
+    else:
+        o, (k, v) = attn_mod.attend(
+            p["attn"], h, positions, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+            rope_theta=cfg.rope_theta, kind="causal", use_rope=False,
+            policy=policy, dense_max_seq=cfg.dense_attn_max,
+            kv_block=cfg.kv_block)
+        if cache is not None:
+            cache = attn_mod.cache_from_prefill(k, v, positions,
+                                                cache["k"].shape[2])
+    x = x + o
+    h = layernorm(p["norm_x"], x)
+    x = x + attn_mod.cross_attend(
+        p["xattn"], h, enc_kv, n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
+        head_dim=cfg.head_dim_, policy=policy)
+    h = layernorm(p["norm2"], x)
+    x = x + mlp(p["mlp"], h, act="gelu", policy=policy)
+    return policy.act_residual(x), cache
+
+
+def _cross_kv(cfg, params, enc_out):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    def one(p):
+        return attn_mod.encoder_kv(p["xattn"], enc_out,
+                                   n_kv_heads=cfg.n_heads,
+                                   head_dim=cfg.head_dim_)
+    return jax.vmap(one)(params["layers"])  # stacked (L, B, S_enc, H, Dh)
+
+
+def _decoder(cfg, policy, params, x, positions, cross_kv, caches, decode):
+    def body(carry, inp):
+        x = carry
+        p, ckv, cache = inp
+        x, new_cache = _dec_block(p, cfg, policy, x, positions, ckv, cache,
+                                  decode)
+        return x, (new_cache if new_cache is not None else 0)
+
+    if cfg.remat and not decode:
+        body = jax.checkpoint(body)
+
+    def scan_or_unroll(body_fn, init, xs):
+        if cfg.use_scan:
+            return jax.lax.scan(body_fn, init, xs)
+        carry, ys = init, []
+        for i in range(cfg.n_layers):
+            carry, y = body_fn(carry, jax.tree.map(lambda a: a[i], xs))
+            ys.append(y)
+        stack = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+        return carry, stack
+
+    layer_caches = None if caches is None else caches["layers"]
+    if layer_caches is None:
+        def body_nc(carry, inp):
+            p, ckv = inp
+            return body(carry, (p, ckv, None))
+        x, _ = scan_or_unroll(body_nc, x, (params["layers"], cross_kv))
+        return x, None
+    if decode:
+        # cache-in-carry (single aliased buffer) — see transformer.py
+        def dec_body(carry, inp):
+            x, cs, i = carry
+            p, ckv = inp
+            c = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                       keepdims=False), cs)
+            x, new_c = _dec_block(p, cfg, policy, x, positions, ckv, c,
+                                  True)
+            cs = jax.tree.map(
+                lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                    a, n.astype(a.dtype), i, 0), cs, new_c)
+            return (x, cs, i + 1), None
+
+        if cfg.use_scan:
+            (x, new_caches, _), _ = jax.lax.scan(
+                dec_body, (x, layer_caches, jnp.zeros((), jnp.int32)),
+                (params["layers"], cross_kv))
+        else:
+            carry = (x, layer_caches, jnp.zeros((), jnp.int32))
+            for i in range(cfg.n_layers):
+                carry, _ = dec_body(carry, jax.tree.map(
+                    lambda a: a[i], (params["layers"], cross_kv)))
+            x, new_caches, _ = carry
+        return x, {"layers": new_caches}
+    x, new_caches = scan_or_unroll(
+        body, x, (params["layers"], cross_kv, layer_caches))
+    return x, {"layers": new_caches}
+
+
+def _embed_dec(cfg, params, tokens, pos0=0):
+    x = embed(params["embed"], tokens, COMPUTE_DTYPE)
+    s = tokens.shape[1]
+    pe = jax.lax.dynamic_slice_in_dim(
+        params["pos_embed"], pos0, s, axis=0) if isinstance(pos0, int) else (
+        params["pos_embed"][pos0])
+    return x + pe.astype(COMPUTE_DTYPE)
+
+
+def apply_train(cfg: ModelConfig, policy: Policy, params, tokens, frames):
+    """(tokens (B,S), frames (B,enc_seq,d)) → (logits, aux=0)."""
+    enc_out = encode(cfg, policy, params, frames)
+    cross_kv = _cross_kv(cfg, params, enc_out)
+    x = policy.act_residual(_embed_dec(cfg, params, tokens))
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    x, _ = _decoder(cfg, policy, params, x, positions, cross_kv, None, False)
+    x = layernorm(params["final_norm"], x)
+    logits = _mask_pad_logits(cfg, x @ params["embed"]["tokens"].astype(x.dtype).T)
+    return logits.astype(jnp.float32), jnp.zeros((), jnp.float32)
+
+
+def init_dec_cache(cfg: ModelConfig, batch: int, cache_len: int, enc_seq: int):
+    self_c = attn_mod.init_cache(batch, cache_len, cfg.n_kv_heads,
+                                 cfg.head_dim_)
+    cross = {
+        "k": jnp.zeros((batch, enc_seq, cfg.n_heads, cfg.head_dim_),
+                       COMPUTE_DTYPE),
+        "v": jnp.zeros((batch, enc_seq, cfg.n_heads, cfg.head_dim_),
+                       COMPUTE_DTYPE),
+    }
+    def stack(x):
+        return jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy()
+    return {"layers": jax.tree.map(stack, self_c),
+            "cross": jax.tree.map(stack, cross)}
+
+
+def prefill(cfg: ModelConfig, policy: Policy, params, tokens, frames,
+            cache_len):
+    enc_out = encode(cfg, policy, params, frames)
+    ckv = _cross_kv(cfg, params, enc_out)
+    caches = init_dec_cache(cfg, tokens.shape[0], cache_len, frames.shape[1])
+    x = policy.act_residual(_embed_dec(cfg, params, tokens))
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    x, new = _decoder(cfg, policy, params, x, positions,
+                      (ckv[0], ckv[1]), caches, False)
+    caches = {"layers": new["layers"],
+              "cross": {"k": ckv[0].astype(COMPUTE_DTYPE),
+                        "v": ckv[1].astype(COMPUTE_DTYPE)}}
+    x = layernorm(params["final_norm"], x[:, -1:])
+    logits = _mask_pad_logits(cfg, x @ params["embed"]["tokens"].astype(x.dtype).T)
+    return logits[:, 0].astype(jnp.float32), caches
+
+
+def decode_step(cfg: ModelConfig, policy: Policy, params, token, caches, pos):
+    x = embed(params["embed"], token, COMPUTE_DTYPE)
+    x = x + params["pos_embed"][pos][:, None].astype(COMPUTE_DTYPE)
+    positions = pos[:, None]
+    cross = (caches["cross"]["k"], caches["cross"]["v"])
+    x, new = _decoder(cfg, policy, params, x, positions, cross,
+                      {"layers": caches["layers"]}, True)
+    caches = {"layers": new["layers"], "cross": caches["cross"]}
+    x = layernorm(params["final_norm"], x)
+    logits = _mask_pad_logits(cfg, x @ params["embed"]["tokens"].astype(x.dtype).T)
+    return logits[:, 0].astype(jnp.float32), caches

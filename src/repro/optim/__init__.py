@@ -1,0 +1,1 @@
+"""Optimizer substrate: AdamW (fp32 masters), schedules, grad compression."""

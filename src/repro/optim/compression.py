@@ -1,0 +1,62 @@
+"""Gradient compression for cross-pod reduction (distributed-opt trick).
+
+At 1000+ node scale the ``pod`` axis all-reduce is the slowest collective
+(DCN, not ICI). Two compressors, both with error feedback so the *training
+trajectory* converges to the uncompressed one:
+
+  * bf16  — halves cross-pod bytes; error feedback buffers the rounding
+            residual (fp32 - bf16) and re-adds it next step.
+  * int8  — per-tensor scaled int8 (8×), same error-feedback contract.
+
+Applied at the microbatch-accumulation boundary: local fp32 accumulation,
+compress, (implicit GSPMD) all-reduce, decompress, add residual.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedback(NamedTuple):
+    residual: object  # pytree fp32, same structure as grads
+
+
+def init_error_feedback(params) -> ErrorFeedback:
+    return ErrorFeedback(
+        residual=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _compress_bf16(g):
+    c = g.astype(jnp.bfloat16)
+    return c, g - c.astype(jnp.float32)
+
+
+def _compress_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g - deq
+
+
+def compress_grads(grads, ef: ErrorFeedback, *, mode: str = "bf16"):
+    """Returns (compressed grads ready for reduction, new error feedback).
+
+    mode: "none" | "bf16" | "int8".
+    """
+    if mode == "none":
+        return grads, ef
+    fn = {"bf16": _compress_bf16, "int8": _compress_int8}[mode]
+
+    def one(g, r):
+        c, new_r = fn(g.astype(jnp.float32) + r)
+        return c, new_r
+
+    out = jax.tree.map(one, grads, ef.residual)
+    comp = jax.tree.map(lambda o: o[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda o: o[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return comp, ErrorFeedback(residual=res)

@@ -1,0 +1,20 @@
+"""LR schedules (pure functions of the int step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, peak_lr, warmup_steps, total_steps,
+                       min_ratio=0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+    t = jnp.clip((step - warmup_steps)
+                 / jnp.maximum(1.0, total_steps - warmup_steps), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5
+                     * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, *, peak_lr, **_):
+    del step
+    return jnp.asarray(peak_lr, jnp.float32)

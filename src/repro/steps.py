@@ -1,0 +1,313 @@
+"""Train / prefill / decode step builders with sharding metadata.
+
+``make_*_step`` return a ``StepBuild``: the pure step function plus the
+PartitionSpecs for its inputs/outputs and the ShapeDtypeStructs needed to
+``jit(...).lower()`` it without allocating anything — the contract the
+multi-pod dry-run (launch/dryrun.py) and the roofline harness consume.
+
+Training (DESIGN.md §4): microbatched gradient accumulation (lax.scan),
+bf16 compute / fp32 masters+moments, optional gradient compression with
+error feedback, AdamW + cosine schedule, z-loss, MoE aux loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.model import (
+    Model,
+    build,
+    cache_specs,
+    effective_cache_len,
+    input_specs,
+)
+from repro.optim import adamw, compression, schedule as sched
+from repro.sharding import DATA, MODEL, POD, Policy, param_specs
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass
+class StepBuild:
+    fn: Callable                 # (state/params, batch…) -> …
+    arg_structs: tuple           # positional ShapeDtypeStructs for lower()
+    in_specs: tuple              # matching PartitionSpecs
+    out_specs: Any               # PartitionSpecs of outputs
+    loop_dims: dict              # name -> full trip count (roofline §6)
+    meta: dict
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def batch_axes_for(global_batch: int, mesh) -> tuple:
+    """Largest batch-sharding axis set the batch size divides."""
+    if mesh is None:
+        return ()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = [a for a in (POD, DATA) if a in sizes]
+    prod = 1
+    chosen = []
+    for a in axes:
+        if global_batch % (prod * sizes[a]) == 0:
+            chosen.append(a)
+            prod *= sizes[a]
+    return tuple(chosen)
+
+
+def _batch_spec(batch_tree, baxes):
+    return jax.tree.map(lambda _: P(baxes), batch_tree)
+
+
+def _cache_partition_specs(cache_tree, policy: Policy):
+    """PartitionSpecs for a decode cache pytree by leaf-name rules."""
+    flat = jax.tree_util.tree_flatten_with_path(cache_tree)
+    leaves, treedef = jax.tree_util.tree_flatten(cache_tree)
+    b = P(policy.batch_axes) if policy.batch_axes else P(None)
+    bax = policy.batch_axes if policy.batch_axes else None
+    m = policy.model_axis
+    out = []
+    for kp, leaf in flat[0]:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        stacked = path.startswith("layers") or path.startswith("cross")
+        nd = leaf.ndim - (1 if stacked else 0)
+        if path.endswith("/k") or path.endswith("/v"):
+            if "cross" in path:     # (B, S_enc, H, Dh): heads on model
+                spec = (bax, None, m, None)[:nd]
+            else:                    # (B, Hkv, S, Dh): seq on model
+                spec = (bax, None, m, None)[:nd]
+        elif path.endswith("/pos"):
+            spec = (bax, m)[:nd]
+        elif path.endswith("/wkv"):  # (B, H, Dk, Dv): Dv on model
+            spec = (bax, None, None, m)[:nd]
+        elif path.endswith("_shift"):  # (B, d)
+            spec = (bax, m)[:nd]
+        elif path.endswith("/h"):    # (B, d_rnn)
+            spec = (bax, m)[:nd]
+        elif path.endswith("/conv"):  # (B, 3, d_rnn)
+            spec = (bax, None, m)[:nd]
+        else:
+            spec = (bax,) + (None,) * (nd - 1)
+        if stacked:
+            spec = (None,) + tuple(spec)
+        out.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _xent(logits, labels, policy: Policy):
+    """Stable token cross-entropy + z-loss; logits (B,S,V) fp32."""
+    logits = policy.logits(logits)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold).mean()
+    z_loss = 1e-4 * jnp.square(lse).mean()
+    return nll + z_loss, nll
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh=None,
+    *,
+    microbatches: int = 8,
+    compress: str = "none",
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 200,
+    total_steps: int = 10_000,
+    aux_coef: float = 0.01,
+) -> StepBuild:
+    model = build(cfg)
+    policy = Policy.for_mesh(mesh) if mesh is not None else Policy.none()
+    baxes = batch_axes_for(shape.global_batch // microbatches, mesh)
+    if mesh is not None:
+        policy = dataclasses.replace(policy, batch_axes=baxes,
+                                     seq_shard_residual=cfg.sp_residual)
+
+    def loss_fn(params32, mb):
+        params = jax.tree.map(lambda x: x.astype(COMPUTE_DTYPE)
+                              if x.dtype == jnp.float32 else x, params32)
+        labels = mb.pop("labels")
+        logits, aux = model.apply_train(policy, params, **mb)
+        if cfg.family == "vlm":
+            logits = logits[:, cfg.n_vision_tokens:]
+        loss, nll = _xent(logits, labels, policy)
+        return loss + aux_coef * aux, nll
+
+    def train_step(state, batch):
+        params, opt, ef = state["params"], state["opt"], state["ef"]
+        # (B, …) -> (M, mb, …); re-pin the microbatch sharding explicitly
+        def resh(x):
+            x = x.reshape((microbatches, x.shape[0] // microbatches)
+                          + x.shape[1:])
+            if mesh is not None and baxes:
+                x = jax.lax.with_sharding_constraint(x, P(None, baxes))
+            return x
+        mbs = jax.tree.map(resh, batch)
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def mb_body(acc, mb):
+            (loss, nll), grads = grad_fn(params, dict(mb))
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return acc, (loss, nll)
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if cfg.use_scan:
+            grads, (losses, nlls) = jax.lax.scan(mb_body, zero, mbs)
+        else:
+            grads, ls, ns = zero, [], []
+            for i in range(microbatches):
+                grads, (l, n) = mb_body(
+                    grads, jax.tree.map(lambda x: x[i], mbs))
+                ls.append(l)
+                ns.append(n)
+            losses, nlls = jnp.stack(ls), jnp.stack(ns)
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        grads, ef = compression.compress_grads(grads, ef, mode=compress)
+        lr = sched.cosine_with_warmup(
+            opt.step, peak_lr=peak_lr, warmup_steps=warmup_steps,
+            total_steps=total_steps)
+        params, opt, metrics = adamw.update(grads, opt, params, lr=lr)
+        metrics.update(loss=losses.mean(), nll=nlls.mean())
+        return {"params": params, "opt": opt, "ef": ef}, metrics
+
+    # --- lowering metadata ---
+    batch_structs = input_specs(cfg, shape)
+    params_s = jax.eval_shape(
+        functools.partial(_init_for, model, cfg), jax.random.key(0))
+    state_struct = {
+        "params": params_s,
+        "opt": jax.eval_shape(adamw.init, params_s),
+        "ef": jax.eval_shape(compression.init_error_feedback, params_s),
+    }
+    stacked = ("layers", "enc_layers")
+    p_specs = param_specs(params_s, stacked_prefixes=stacked)
+    state_specs = {
+        "params": p_specs,
+        "opt": adamw.AdamWState(step=P(), mu=p_specs, nu=p_specs),
+        "ef": compression.ErrorFeedback(residual=p_specs),
+    }
+    batch_specs = _batch_spec(batch_structs, batch_axes_for(
+        shape.global_batch, mesh))
+    loop_dims = {"microbatches": microbatches, "layers": _layer_count(cfg)}
+    if cfg.family == "encdec":
+        loop_dims["enc_layers"] = cfg.n_enc_layers
+    return StepBuild(
+        fn=train_step,
+        arg_structs=(state_struct, batch_structs),
+        in_specs=(state_specs, batch_specs),
+        out_specs=(state_specs, P()),
+        loop_dims=loop_dims,
+        meta=dict(kind="train", microbatches=microbatches),
+    )
+
+
+def _init_for(model: Model, cfg: ModelConfig, rng, max_positions=None):
+    if cfg.family == "encdec":
+        return model.init(rng, max_positions or 4096)
+    return model.init(rng)
+
+
+def _layer_count(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        pat = cfg.pattern or ("rec", "rec", "attn")
+        return cfg.n_layers // len(pat)   # scan unit = one pattern group
+    return cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode steps (serving)
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeSpec, mesh=None) -> StepBuild:
+    model = build(cfg)
+    policy = Policy.for_mesh(mesh) if mesh is not None else Policy.none()
+    baxes = batch_axes_for(shape.global_batch, mesh)
+    if mesh is not None:
+        policy = dataclasses.replace(policy, batch_axes=baxes)
+    clen = effective_cache_len(cfg, shape)
+
+    def prefill_step(params, batch):
+        return model.prefill(policy, params, clen, **batch)
+
+    params_s = _serve_params_struct(model, cfg, shape)
+    batch_structs = input_specs(cfg, shape)
+    p_specs = param_specs(params_s, stacked_prefixes=("layers", "enc_layers"))
+    cache_s = cache_specs(cfg, shape)
+    cache_p = _cache_partition_specs(cache_s, policy)
+    return StepBuild(
+        fn=prefill_step,
+        arg_structs=(params_s, batch_structs),
+        in_specs=(p_specs, _batch_spec(batch_structs, baxes)),
+        out_specs=(P(baxes) if baxes else P(), cache_p),
+        loop_dims={"layers": _layer_count(cfg),
+                   **({"enc_layers": cfg.n_enc_layers}
+                      if cfg.family == "encdec" else {})},
+        meta=dict(kind="prefill", cache_len=clen),
+    )
+
+
+def make_decode_step(cfg: ModelConfig, shape: ShapeSpec, mesh=None) -> StepBuild:
+    model = build(cfg)
+    policy = Policy.for_mesh(mesh) if mesh is not None else Policy.none()
+    baxes = batch_axes_for(shape.global_batch, mesh)
+    if mesh is not None:
+        policy = dataclasses.replace(policy, batch_axes=baxes,
+                                     decode_mode=True)
+
+    def decode_fn(params, caches, token, pos):
+        return model.decode_step(policy, params, token, caches, pos)
+
+    params_s = _serve_params_struct(model, cfg, shape)
+    cache_s = cache_specs(cfg, shape)
+    io = input_specs(cfg, shape)
+    p_specs = param_specs(params_s, stacked_prefixes=("layers", "enc_layers"))
+    cache_p = _cache_partition_specs(cache_s, policy)
+    bspec = P(baxes) if baxes else P()
+    return StepBuild(
+        fn=decode_fn,
+        arg_structs=(params_s, cache_s, io["token"], io["pos"]),
+        in_specs=(p_specs, cache_p, bspec, bspec),
+        out_specs=(bspec, cache_p),
+        loop_dims={"layers": _layer_count(cfg)},
+        meta=dict(kind="decode",
+                  cache_len=effective_cache_len(cfg, shape)),
+    )
+
+
+def _serve_params_struct(model: Model, cfg: ModelConfig, shape: ShapeSpec):
+    """Serving params: bf16 everywhere (fp32 masters live in training)."""
+    max_pos = max(shape.seq_len, 4096) if cfg.family == "encdec" else None
+    s = jax.eval_shape(functools.partial(_init_for, model, cfg,
+                                         max_positions=max_pos),
+                       jax.random.key(0))
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, COMPUTE_DTYPE if x.dtype == jnp.float32 else x.dtype),
+        s)
+
+
+def make_step(cfg: ModelConfig, shape: ShapeSpec, mesh=None, **kw) -> StepBuild:
+    if shape.kind == "train":
+        return make_train_step(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape, mesh)
+    if shape.kind == "decode":
+        return make_decode_step(cfg, shape, mesh)
+    raise ValueError(shape.kind)

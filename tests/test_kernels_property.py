@@ -1,0 +1,46 @@
+"""Property-based kernel tests (hypothesis): random shapes/densities/inputs."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitpack import pack_bits, packed_literals
+from repro.kernels import clause_eval
+from repro.kernels import ref as kref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 4),
+    n_half=st.integers(1, 40),
+    o=st.integers(1, 120),
+    b=st.integers(1, 10),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_votes_kernel_any_shape(m, n_half, o, b, density, seed):
+    n = 2 * n_half
+    rng = np.random.default_rng(seed)
+    include = jnp.asarray(rng.uniform(size=(m, n, 2 * o)) < density)
+    x = jnp.asarray(rng.integers(0, 2, (b, o)), jnp.uint8)
+    lit = jnp.concatenate([x, 1 - x], axis=-1)
+    want = kref.clause_votes_ref(include, lit)
+    got = clause_eval.clause_votes_packed(
+        pack_bits(include.astype(jnp.uint8)), packed_literals(x))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_half=st.integers(1, 30),
+    o=st.integers(1, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_votes_bounded_by_half_clauses(n_half, o, seed):
+    """|votes| ≤ n/2 — structural invariant of Eq. 2/3."""
+    n = 2 * n_half
+    rng = np.random.default_rng(seed)
+    include = jnp.asarray(rng.uniform(size=(1, n, 2 * o)) < 0.3)
+    x = jnp.asarray(rng.integers(0, 2, (4, o)), jnp.uint8)
+    got = np.asarray(clause_eval.clause_votes_packed(
+        pack_bits(include.astype(jnp.uint8)), packed_literals(x)))
+    assert np.abs(got).max() <= n_half

@@ -1,0 +1,72 @@
+"""AdamW, schedules, gradient compression (error feedback)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, compression
+from repro.optim.schedule import cosine_with_warmup
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw.init(params)
+    target = jnp.asarray([1.0, 2.0])
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(
+            lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return adamw.update(grads, state, params, lr=0.05, weight_decay=0.0)
+
+    for _ in range(400):
+        params, state, metrics = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+    assert int(state.step) == 400
+
+
+def test_grad_clipping_bounds_update():
+    g = {"w": jnp.asarray([1e6, -1e6])}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(adamw.global_norm(clipped)) <= 1.0 + 1e-5
+    assert float(norm) > 1e5
+
+
+def test_schedule_shape():
+    s = jnp.asarray
+    peak = 3e-4
+    lr0 = cosine_with_warmup(s(0), peak_lr=peak, warmup_steps=100,
+                             total_steps=1000)
+    lr_peak = cosine_with_warmup(s(100), peak_lr=peak, warmup_steps=100,
+                                 total_steps=1000)
+    lr_end = cosine_with_warmup(s(1000), peak_lr=peak, warmup_steps=100,
+                                total_steps=1000)
+    assert float(lr0) == 0.0
+    np.testing.assert_allclose(float(lr_peak), peak, rtol=1e-5)
+    np.testing.assert_allclose(float(lr_end), 0.1 * peak, rtol=1e-3)
+
+
+def test_compression_error_feedback_preserves_sum():
+    """Σ_t compressed_t == Σ_t grads_t ± last residual (error feedback)."""
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.zeros((64,))}
+    ef = compression.init_error_feedback(params)
+    total_true = np.zeros(64)
+    total_comp = np.zeros(64)
+    for t in range(30):
+        g = {"w": jnp.asarray(rng.normal(size=64) * 1e-3, jnp.float32)}
+        comp, ef = compression.compress_grads(g, ef, mode="int8")
+        total_true += np.asarray(g["w"], np.float64)
+        total_comp += np.asarray(comp["w"], np.float64)
+    resid = np.asarray(ef.residual["w"])
+    np.testing.assert_allclose(total_comp + resid, total_true, atol=1e-6)
+
+
+def test_compression_bf16_dtype():
+    params = {"w": jnp.zeros((8,))}
+    ef = compression.init_error_feedback(params)
+    g = {"w": jnp.asarray(np.linspace(-1, 1, 8), jnp.float32)}
+    comp, ef = compression.compress_grads(g, ef, mode="bf16")
+    assert comp["w"].dtype == jnp.bfloat16
+    comp2, _ = compression.compress_grads(g, ef, mode="none")
+    assert comp2["w"].dtype == jnp.float32

@@ -1,0 +1,43 @@
+"""Guard: every large parameter must be sharded by the partition rules.
+
+A rule gap replicates the leaf onto all 256/512 devices; on qwen2-moe and
+recurrentgemma that silently cost 13–35 GiB/device (found via the dry-run
+memory analysis — EXPERIMENTS.md §Perf iteration 0e). This test fails on
+any future arch/param addition whose big tensors miss the rules.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models.model import build
+from repro.sharding import param_specs
+
+BIG = 1_000_000  # elements
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_big_params_are_sharded(arch):
+    cfg = get_config(arch)
+    model = build(cfg)
+    if cfg.family == "encdec":
+        struct = jax.eval_shape(lambda: model.init(jax.random.key(0), 4096))
+    else:
+        struct = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    specs = param_specs(struct, stacked_prefixes=("layers", "enc_layers"))
+
+    flat_s = jax.tree_util.tree_flatten_with_path(struct)[0]
+    flat_p = jax.tree_util.tree_flatten(specs)[0]
+    offenders = []
+    for (kp, leaf), spec in zip(flat_s, flat_p):
+        per_layer = int(np.prod(leaf.shape))
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        stacked = path.startswith(("layers", "enc_layers"))
+        if stacked:
+            per_layer //= leaf.shape[0]
+        if per_layer >= BIG and all(s is None for s in spec):
+            offenders.append((path, leaf.shape, spec))
+    assert not offenders, (
+        "replicated big params (add partition rules in sharding.py):\n"
+        + "\n".join(f"  {p} {s} {sp}" for p, s, sp in offenders))

@@ -1,0 +1,185 @@
+"""Clause index (paper §3): O(1) maintenance, inference equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    TMConfig, TMState, apply_events, build_index, compact, compact_eval,
+    compact_scores, delete, dense_clause_outputs, empty_index,
+    events_from_transition, indexed_scores, indexed_work, insert, init_tm,
+    scores, validate,
+)
+from repro.core import ref
+from repro.core.indexing import Event
+from repro.core.types import include_mask
+
+CFG = TMConfig(n_classes=3, n_clauses=8, n_features=6, n_states=50,
+               s=3.0, threshold=4, empty_clause_output=1)
+CAP = CFG.n_clauses  # worst-case capacity
+
+
+def random_state(cfg, seed=0, density=0.4):
+    rng = np.random.default_rng(seed)
+    inc = rng.uniform(size=(cfg.n_classes, cfg.n_clauses, cfg.n_literals)) < density
+    ta = np.where(inc, cfg.n_states + 1, cfg.n_states)
+    return TMState(ta_state=jnp.asarray(ta, jnp.int16))
+
+
+# ---------------------------------------------------------------------------
+# Structure invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_build_index_invariants(seed):
+    state = random_state(CFG, seed)
+    idx = build_index(CFG, state, CAP)
+    checks = validate(CFG, state, idx)
+    for name, ok in checks.items():
+        assert bool(ok), name
+
+
+def test_empty_index_is_valid():
+    state = init_tm(CFG)
+    idx = empty_index(CFG, CAP)
+    checks = validate(CFG, state, idx)
+    for name, ok in checks.items():
+        assert bool(ok), name
+
+
+def test_insert_then_delete_roundtrip():
+    """Paper's step-by-step example semantics: swap-with-last + pos fixup."""
+    idx = empty_index(CFG, CAP)
+    i, k = jnp.asarray(1), jnp.asarray(3)
+    # insert clauses 2, 5, 7 into list (1, 3)
+    for j in (2, 5, 7):
+        idx = insert(idx, i, jnp.asarray(j), k)
+    assert int(idx.counts[1, 3]) == 3
+    np.testing.assert_array_equal(np.asarray(idx.lists[1, 3, :3]), [2, 5, 7])
+    assert int(idx.pos[1, 5, 3]) == 1
+    # delete the middle element: 7 swaps into its slot
+    idx = delete(idx, i, jnp.asarray(5), k)
+    assert int(idx.counts[1, 3]) == 2
+    np.testing.assert_array_equal(np.asarray(idx.lists[1, 3, :2]), [2, 7])
+    assert int(idx.pos[1, 7, 3]) == 1
+    assert int(idx.pos[1, 5, 3]) == -1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, CFG.n_classes - 1),
+                          st.integers(0, CFG.n_clauses - 1),
+                          st.integers(0, CFG.n_literals - 1)),
+                min_size=1, max_size=40))
+def test_event_replay_equals_rebuild(ops):
+    """Property: replaying any insert/delete sequence ≡ batch rebuild."""
+    inc = np.zeros((CFG.n_classes, CFG.n_clauses, CFG.n_literals), bool)
+    idx = empty_index(CFG, CAP)
+    for (i, j, k) in ops:
+        if inc[i, j, k]:
+            idx = delete(idx, jnp.asarray(i), jnp.asarray(j), jnp.asarray(k))
+            inc[i, j, k] = False
+        else:
+            idx = insert(idx, jnp.asarray(i), jnp.asarray(j), jnp.asarray(k))
+            inc[i, j, k] = True
+    ta = np.where(inc, CFG.n_states + 1, CFG.n_states)
+    state = TMState(ta_state=jnp.asarray(ta, jnp.int16))
+    checks = validate(CFG, state, idx)
+    for name, ok in checks.items():
+        assert bool(ok), name
+    # counts must agree with a fresh build (list *order* may differ — the
+    # index is a set structure; validate() checks the bijection)
+    fresh = build_index(CFG, state, CAP)
+    np.testing.assert_array_equal(np.asarray(idx.counts), np.asarray(fresh.counts))
+
+
+def test_apply_events_masked_buffer():
+    state0 = init_tm(CFG)
+    state1 = random_state(CFG, 5)
+    old_inc = include_mask(CFG, state0)
+    new_inc = include_mask(CFG, state1)
+    n_changed = int(np.asarray(old_inc != new_inc).sum())
+    events = events_from_transition(old_inc, new_inc, max_events=n_changed + 8)
+    idx = apply_events(empty_index(CFG, CAP), events)
+    checks = validate(CFG, state1, idx)
+    for name, ok in checks.items():
+        assert bool(ok), name
+
+
+# ---------------------------------------------------------------------------
+# Inference equivalence (the paper's core claim: same predictions, less work)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_indexed_scores_equal_dense_scores(seed):
+    state = random_state(CFG, seed)
+    idx = build_index(CFG, state, CAP)
+    rng = np.random.default_rng(300 + seed)
+    xs = jnp.asarray(rng.integers(0, 2, (7, CFG.n_features)), jnp.uint8)
+    got = indexed_scores(CFG, idx, xs)
+    want = scores(CFG, state, xs)  # empty_clause_output=1 (paper Eq. 4 mode)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_indexed_scores_match_numpy_list_oracle(seed):
+    state = random_state(CFG, seed)
+    idx = build_index(CFG, state, CAP)
+    rng = np.random.default_rng(400 + seed)
+    xs = rng.integers(0, 2, (5, CFG.n_features)).astype(np.uint8)
+    got = np.asarray(indexed_scores(CFG, idx, jnp.asarray(xs)))
+    for b in range(xs.shape[0]):
+        want = ref.indexed_scores_ref(np.asarray(idx.lists),
+                                      np.asarray(idx.counts),
+                                      xs[b], CFG.n_clauses)
+        np.testing.assert_array_equal(got[b], want)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_compact_eval_equals_dense(seed):
+    state = random_state(CFG, seed)
+    lmax = int(np.asarray(include_mask(CFG, state).sum(-1)).max())
+    comp = compact(CFG, state, lmax)
+    rng = np.random.default_rng(500 + seed)
+    xs = jnp.asarray(rng.integers(0, 2, (6, CFG.n_features)), jnp.uint8)
+    got = compact_eval(CFG, comp, xs)
+    want = dense_clause_outputs(CFG, state, xs, empty_output=1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(compact_scores(CFG, comp, xs)),
+        np.asarray(scores(CFG, state, xs)))
+
+
+def test_indexed_work_metric():
+    """Work == Σ_{k false} counts[i,k] — the quantity in §3 'Remarks'."""
+    state = random_state(CFG, 9, density=0.2)
+    idx = build_index(CFG, state, CAP)
+    x = np.zeros(CFG.n_features, np.uint8)  # all features 0 → x-literals false
+    w = int(indexed_work(idx, jnp.asarray(x[None]))[0])
+    counts = np.asarray(idx.counts)
+    want = counts[:, :CFG.n_features].sum()  # false literals = first o
+    assert w == want
+
+
+def test_index_sync_through_learning():
+    """Dense learning + event-driven index maintenance stay in sync."""
+    from repro.core import update_batch_sequential
+    cfg = TMConfig(n_classes=2, n_clauses=6, n_features=5, n_states=20,
+                   s=3.0, threshold=3)
+    state = init_tm(cfg)
+    idx = empty_index(cfg, cfg.n_clauses)
+    key = jax.random.key(0)
+    rng = np.random.default_rng(0)
+    for step in range(5):
+        key, sub = jax.random.split(key)
+        xs = jnp.asarray(rng.integers(0, 2, (8, cfg.n_features)), jnp.uint8)
+        ys = jnp.asarray(rng.integers(0, 2, 8), jnp.int32)
+        old_inc = include_mask(cfg, state)
+        state = update_batch_sequential(cfg, state, xs, ys, sub)
+        new_inc = include_mask(cfg, state)
+        events = events_from_transition(old_inc, new_inc,
+                                        max_events=int(cfg.n_classes * cfg.n_clauses * cfg.n_literals))
+        idx = apply_events(idx, events)
+        checks = validate(cfg, state, idx)
+        for name, ok in checks.items():
+            assert bool(ok), f"step {step}: {name}"
