@@ -1,12 +1,16 @@
 """Benchmark harness entrypoint: one section per paper table + LM bench.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
 
 Sections:
-  [tm_speedup]  paper Tables 1–3 analogue — indexed vs exhaustive TM
-                throughput + the §3 work-ratio validation (0.02 / 0.006)
+  [tm_speedup]  paper Tables 1–3 analogue — per-engine TM throughput via the
+                engine registry + the §3 work-ratio validation (0.02 / 0.006);
+                also written to BENCH_tm.json for cross-PR tracking
   [work_ratio]  hardware-independent reproduction of the paper's Remarks
   [lm_step]     reduced-config LM step wall-times (all 10 archs)
+
+``--smoke`` runs a single scaled-down TM cell (no JSON, no LM zoo) — the CI
+sanity path used by scripts/ci.sh.
 
 Roofline numbers (dry-run-derived, not wall-time) live in results/ and
 EXPERIMENTS.md; regenerate with launch/roofline_sweep.py.
@@ -14,36 +18,46 @@ EXPERIMENTS.md; regenerate with launch/roofline_sweep.py.
 from __future__ import annotations
 
 import argparse
-import sys
+
+
+def _print_tm_row(r: dict) -> None:
+    base = f"tm/{r['family']}/o{r['features']}/c{r['clauses']}"
+    for eng in r["engines"]:
+        speed = r.get(f"infer_speedup_{eng}")
+        suffix = f"speedup={speed:.2f}" if speed is not None else ""
+        print(f"{base}/infer_{eng},{r[f'infer_{eng}_us']:.2f},{suffix}")
+    print(f"{base}/train_plain,{r['train_plain_us']:.2f},")
+    print(f"{base}/train_indexed,{r['train_indexed_us']:.2f},"
+          f"speedup={r['train_speedup']:.2f}")
+    print(f"{base}/work_ratio,,{r['work_ratio']:.5f}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full grids (slow on 1 CPU core)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny TM cell only (CI sanity check)")
     ap.add_argument("--skip-lm", action="store_true")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
 
-    # --- paper tables: TM speedup grid -----------------------------------
     from benchmarks import tm_speedup
+    from repro.configs.tm import imdb_like, mnist_like
+
+    if args.smoke:
+        row = tm_speedup.bench_cell(mnist_like(1), 64, n_eval=8, n_train=4)
+        _print_tm_row(row)
+        return
+
+    # --- paper tables: TM speedup grid -----------------------------------
     rows = tm_speedup.run(fast=not args.full)
     for r in rows:
-        base = f"tm/{r['family']}/o{r['features']}/c{r['clauses']}"
-        print(f"{base}/infer_dense,{r['infer_dense_us']:.2f},")
-        print(f"{base}/infer_indexed,{r['infer_indexed_us']:.2f},"
-              f"speedup={r['infer_speedup_indexed']:.2f}")
-        print(f"{base}/infer_compact,{r['infer_compact_us']:.2f},"
-              f"speedup={r['infer_speedup_compact']:.2f}")
-        print(f"{base}/infer_bitpack,{r['infer_bitpack_us']:.2f},")
-        print(f"{base}/train_plain,{r['train_plain_us']:.2f},")
-        print(f"{base}/train_indexed,{r['train_indexed_us']:.2f},"
-              f"speedup={r['train_speedup']:.2f}")
-        print(f"{base}/work_ratio,,{r['work_ratio']:.5f}")
+        _print_tm_row(r)
+    tm_speedup.write_json(rows)
 
     # --- paper §3 Remarks: analytic work ratios at paper scale ------------
-    from repro.configs.tm import imdb_like, mnist_like
     from repro.core.indexing import dense_work
     for exp, n_c in ((mnist_like(2, 20000), 20000),
                      (imdb_like(20000, 20000), 20000)):

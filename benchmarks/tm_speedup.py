@@ -1,11 +1,23 @@
 """Paper Tables 1–3 analogue: indexed vs exhaustive TM throughput.
 
 Grid: (dataset-family × features × clauses), measuring
-  * inference us/sample for engines dense | bitpack | compact | indexed
-  * training  us/sample for dense-learning with / without index maintenance
+  * inference us/sample for every requested registry engine
+    (default: dense | bitpack_xla | compact | indexed — the Pallas
+    ``bitpack`` engine runs interpret-mode on CPU containers and is
+    excluded from timing by default; pass it explicitly on a TPU),
+  * training us/sample for dense learning with / without engine-cache
+    maintenance (the jit-native ``api.train_step``),
   * the §3 'Remarks' WORK RATIO (indexed literal-inspections / dense),
     which is hardware-independent — the paper's 0.02 (MNIST) / 0.006 (IMDb)
     claims are validated here exactly.
+
+Engine caches are prepared through the registry with *static* capacities
+derived from the config (``index_capacity`` / ``clause_capacity`` at a 4×
+expected-length capacity factor, cf. MoE expert capacity) — there is no
+data-dependent host sync anywhere on the timed paths.
+
+``run()`` returns machine-readable rows; ``main`` writes them to
+``BENCH_tm.json`` so the perf trajectory is tracked across PRs.
 
 Container scaling: sample counts and the clause grid are scaled down for
 the 1-core CPU (the paper used full datasets on a desktop CPU); trends —
@@ -14,6 +26,10 @@ maintenance — are the reproduction target, magnitudes are host-specific.
 """
 from __future__ import annotations
 
+import argparse
+import dataclasses
+import json
+import platform
 import time
 
 import jax
@@ -21,10 +37,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.tm import fmnist_like, imdb_like, mnist_like
-from repro.core import indexing, tm
-from repro.core.driver import TMDriver
-from repro.core.types import TMConfig, TMState, include_mask
+from repro.core import api, indexing, tm
+from repro.core.engines import get_engine
+from repro.core.types import TMConfig, TMState
 from repro.data.synthetic import binarized_images, bow_documents
+
+DEFAULT_ENGINES = ("dense", "bitpack_xla", "compact", "indexed")
 
 
 def _timeit(fn, *args, reps=3, warmup=1):
@@ -51,15 +69,22 @@ def synthetic_trained_state(cfg: TMConfig, avg_clause_len: float, seed=0):
 
 def work_ratio(cfg: TMConfig, state: TMState, xs) -> float:
     """Paper §3 Remarks: (Σ_{k false} |L_k|) / (n·2o) per class-eval."""
-    idx = indexing.build_index(cfg, state, cfg.n_clauses)
+    idx = indexing.build_index(cfg, state, cfg.resolved_index_capacity)
     w = np.asarray(indexing.indexed_work(idx, xs)).mean()
     return float(w) / indexing.dense_work(cfg)
 
 
-def bench_cell(exp, n_clauses: int, *, n_eval=32, n_train=16, seed=0):
-    cfg = jax.tree_util.tree_map(lambda x: x, exp.tm)  # copy
-    import dataclasses
-    cfg = dataclasses.replace(exp.tm, n_clauses=n_clauses)
+def bench_cell(exp, n_clauses: int, *, engines=DEFAULT_ENGINES,
+               n_eval=32, n_train=16, seed=0):
+    # static cache capacities: 4× the expected list/clause length (cf. MoE
+    # capacity factor); worst-case capacity makes the scatter/gather paths
+    # do n/len× more masked work (§Perf hillclimb C)
+    cap = min(n_clauses,
+              max(16, int(4 * n_clauses * exp.avg_clause_len
+                          / exp.tm.n_literals)))
+    l_max = min(exp.tm.n_literals, max(16, int(4 * exp.avg_clause_len)))
+    cfg = dataclasses.replace(exp.tm, n_clauses=n_clauses,
+                              index_capacity=cap, clause_capacity=l_max)
     if exp.dataset == "image":
         xs, ys = binarized_images(n_eval + n_train, cfg.n_features,
                                   cfg.n_classes, seed=seed)
@@ -68,67 +93,43 @@ def bench_cell(exp, n_clauses: int, *, n_eval=32, n_train=16, seed=0):
                                cfg.n_classes, seed=seed)
     xs = jnp.asarray(xs)
     ys = jnp.asarray(ys)
-    x_eval, y_eval = xs[:n_eval], ys[:n_eval]
+    x_eval = xs[:n_eval]
     x_tr, y_tr = xs[n_eval:], ys[n_eval:]
 
     state = synthetic_trained_state(cfg, exp.avg_clause_len, seed)
-    # realistic list capacity: 4× the expected list length (cf. MoE capacity
-    # factor); worst-case n_clauses capacity makes the scatter path do
-    # n/len× more masked work (§Perf hillclimb C)
-    cap = min(cfg.n_clauses,
-              max(16, int(4 * n_clauses * exp.avg_clause_len
-                          / cfg.n_literals)))
-    drv = TMDriver(cfg=cfg, state=state,
-                   index=indexing.build_index(cfg, state, cap))
 
     r: dict = {"family": exp.name, "features": cfg.n_features,
-               "clauses": n_clauses}
+               "clauses": n_clauses, "engines": list(engines)}
     r["work_ratio"] = work_ratio(cfg, state, x_eval)
 
-    # inference engines — state/index passed as jit ARGS (a closure
-    # constant triggers multi-second XLA constant folding of the packed
-    # tables and pollutes logs)
-    lmax = int(np.asarray(include_mask(cfg, state).sum(-1)).max())
-    comp = indexing.compact(cfg, state, max(lmax, 1))
-    fns = {
-        "dense": (jax.jit(lambda s, x: tm.scores(cfg, s, x)), state),
-        "bitpack": (jax.jit(lambda s, x: tm.bitpacked_scores(cfg, s, x)),
-                    state),
-        "indexed": (jax.jit(
-            lambda i, x: indexing.indexed_scores(cfg, i, x)), drv.index),
-        "compact": (jax.jit(
-            lambda c, x: indexing.compact_scores(cfg, c, x)), comp),
-    }
-    for name, (fn, op) in fns.items():
+    # inference engines via the registry — caches prepared once (as during
+    # learning), passed as jit ARGS (a closure constant triggers multi-second
+    # XLA constant folding of the packed tables and pollutes logs)
+    for name in engines:
+        eng = get_engine(name)
+        cache = jax.jit(lambda s, e=eng: e.prepare(cfg, s))(state)
+        fn = jax.jit(lambda c, x, e=eng: e.scores(cfg, c, x))
         xs_t = x_eval if name != "indexed" else x_eval[:2]
-        r[f"infer_{name}_us"] = _timeit(fn, op, xs_t) / xs_t.shape[0] * 1e6
-    r["infer_speedup_indexed"] = (r["infer_dense_us"]
-                                  / r["infer_indexed_us"])
-    r["infer_speedup_compact"] = (r["infer_dense_us"]
-                                  / r["infer_compact_us"])
+        r[f"infer_{name}_us"] = _timeit(fn, cache, xs_t) / xs_t.shape[0] * 1e6
+    if "dense" in engines:
+        for name in engines:
+            if name != "dense":
+                r[f"infer_speedup_{name}"] = (r["infer_dense_us"]
+                                              / r[f"infer_{name}_us"])
 
-    # training: dense learning, with vs without incremental index
-    # maintenance (index prebuilt; the timed delta is the event replay —
-    # O(1) *work* per boundary crossing; wall-time constant factors of the
-    # functional scatter path are runtime-specific, see EXPERIMENTS.md)
+    # training: dense learning alone vs the full jit-native train_step
+    # (feedback + event diff + incremental cache maintenance for the paper's
+    # index — O(1) *work* per boundary crossing; wall-time constant factors
+    # of the functional scatter path are runtime-specific, see EXPERIMENTS.md)
     key = jax.random.key(seed)
     plain = jax.jit(
         lambda s, x, y: tm.update_batch_sequential(cfg, s, x, y, key))
     t_plain = _timeit(plain, state, x_tr, y_tr, reps=1)
 
-    from repro.core.types import include_mask as _inc
-    max_ev = 512
-
-    @jax.jit
-    def with_index(s, idx, x, y):
-        old = _inc(cfg, TMState(ta_state=s))
-        new_s = tm.update_batch_sequential(cfg, TMState(ta_state=s), x, y,
-                                           key)
-        events = indexing.events_from_transition(
-            old, _inc(cfg, new_s), max_ev)
-        return new_s.ta_state, indexing.apply_events(idx, events)
-    t_idx = _timeit(with_index, state.ta_state, drv.index, x_tr, y_tr,
-                    reps=1)
+    bundle = api.init_bundle(cfg, engines=("indexed",), state=state)
+    step = jax.jit(lambda b, x, y: api.train_step(b, x, y, key,
+                                                  max_events=512))
+    t_idx = _timeit(step, bundle, x_tr, y_tr, reps=1)
     r["train_plain_us"] = t_plain / n_train * 1e6
     r["train_indexed_us"] = t_idx / n_train * 1e6
     r["train_speedup"] = t_plain / t_idx
@@ -139,31 +140,56 @@ GRID_FAMILIES = [mnist_like, fmnist_like]
 CLAUSE_GRID = (256, 1024, 4096)
 
 
-def run(fast: bool = True):
+def run(fast: bool = True, engines=DEFAULT_ENGINES):
     rows = []
     clause_grid = CLAUSE_GRID[:2] if fast else CLAUSE_GRID
     for fam in GRID_FAMILIES:
         for bits in ((1, 2) if fast else (1, 2, 3, 4)):
             for n_c in clause_grid:
-                rows.append(bench_cell(fam(bits), n_c))
+                rows.append(bench_cell(fam(bits), n_c, engines=engines))
     for o in ((5000,) if fast else (5000, 10000, 20000)):
         for n_c in clause_grid:
-            rows.append(bench_cell(imdb_like(o), n_c))
+            rows.append(bench_cell(imdb_like(o), n_c, engines=engines))
     return rows
 
 
+def write_json(rows, path: str = "BENCH_tm.json") -> None:
+    """Machine-readable perf record, one file per run (tracked across PRs)."""
+    payload = {
+        "bench": "tm_speedup",
+        "schema": 1,
+        "backend": jax.default_backend(),
+        "host": platform.machine(),
+        "units": {"infer_*_us": "us/sample", "train_*_us": "us/sample",
+                  "work_ratio": "indexed/dense literal inspections"},
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+
+
 def main():
-    rows = run(fast=True)
-    cols = ["family", "features", "clauses", "work_ratio",
-            "infer_dense_us", "infer_indexed_us", "infer_compact_us",
-            "infer_bitpack_us", "infer_speedup_indexed",
-            "infer_speedup_compact", "train_plain_us", "train_indexed_us",
-            "train_speedup"]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--engines", default=",".join(DEFAULT_ENGINES))
+    ap.add_argument("--out", default="BENCH_tm.json",
+                    help="JSON output path ('' to skip)")
+    args = ap.parse_args()
+    engines = tuple(args.engines.split(","))
+
+    rows = run(fast=not args.full, engines=engines)
+    cols = ["family", "features", "clauses", "work_ratio"]
+    cols += [f"infer_{e}_us" for e in engines]
+    if "dense" in engines:  # speedups are only defined against the baseline
+        cols += [f"infer_speedup_{e}" for e in engines if e != "dense"]
+    cols += ["train_plain_us", "train_indexed_us", "train_speedup"]
     print(",".join(cols))
     for r in rows:
         print(",".join(
             f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
             for c in cols))
+    if args.out:
+        write_json(rows, args.out)
 
 
 if __name__ == "__main__":

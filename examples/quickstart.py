@@ -2,43 +2,39 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Trains a small multiclass TM on synthetic binarized images, keeps the
-paper's clause index in sync during learning, and shows that indexed
-inference (falsification look-up, Eq. 4) gives identical predictions to
-exhaustive evaluation.
+Trains a small multiclass TM on synthetic binarized images through the
+jit-native ``TsetlinMachine`` estimator. Every registered evaluation engine
+(exhaustive dense, Pallas bitpack, XLA bitpack, clause-compact gather, and
+the paper's falsification index, Eq. 4) is kept in sync event-wise during
+learning and gives identical predictions.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import TMConfig
-from repro.core.driver import TMDriver
+from repro.core import TMConfig, TsetlinMachine, registered_engines
 from repro.data.synthetic import binarized_images
 
 cfg = TMConfig(n_classes=4, n_clauses=64, n_features=64, n_states=63,
                s=5.0, threshold=12)
-driver = TMDriver.create(cfg)
+machine = TsetlinMachine(cfg, seed=0).init()
 
 x, y = binarized_images(1024, cfg.n_features, cfg.n_classes,
                         active=0.35, noise=0.03, seed=0)
 x_tr, y_tr = jnp.asarray(x[:768]), jnp.asarray(y[:768])
 x_te, y_te = jnp.asarray(x[768:]), jnp.asarray(y[768:])
 
-key = jax.random.key(0)
 for epoch in range(3):
-    key, sub = jax.random.split(key)
-    driver.train_batch(x_tr, y_tr, sub)          # dense learning + O(1)
-    acc = driver.accuracy(x_te, y_te, engine="indexed")
+    machine.partial_fit(x_tr, y_tr)              # jitted step; caches synced
+    acc = machine.evaluate(x_te, y_te, engine="indexed")
     print(f"epoch {epoch}: test acc (indexed inference) = {acc:.3f}")
 
-pred_dense = driver.predict(x_te, engine="dense")
-pred_index = driver.predict(x_te, engine="indexed")
-pred_kernel = driver.predict(x_te, engine="bitpack")
-assert bool(jnp.all(pred_dense == pred_index)), "index != dense!"
-assert bool(jnp.all(pred_dense == pred_kernel)), "kernel != dense!"
-print("indexed == dense == pallas-kernel predictions ✓")
+preds = {name: machine.predict(x_te, engine=name)
+         for name in registered_engines()}
+for name, p in preds.items():
+    assert bool(jnp.all(p == preds["dense"])), f"{name} != dense!"
+print(f"all engines agree: {' == '.join(preds)} ✓")
 
 from repro.core.indexing import dense_work, indexed_work
-w = float(np.asarray(indexed_work(driver.index, x_te)).mean())
+w = float(np.asarray(indexed_work(machine.index, x_te)).mean())
 print(f"work ratio (paper §3 Remarks): {w / dense_work(cfg):.4f} "
       f"(fraction of exhaustive literal inspections)")

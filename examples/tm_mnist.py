@@ -1,11 +1,12 @@
-"""End-to-end driver (the paper's experiment): TM on MNIST-like data.
+"""End-to-end example (the paper's experiment): TM on MNIST-like data.
 
     PYTHONPATH=src python examples/tm_mnist.py [--epochs 5] [--clauses 512]
 
 Full flow: synthetic binarized-MNIST stream → sequential (paper-faithful)
-TM learning → event-driven index maintenance → per-epoch accuracy with all
-four inference engines → throughput comparison + work-ratio report →
-checkpoint/restore round-trip through the shared checkpointer.
+TM learning through the jit-native estimator → event-driven engine-cache
+maintenance → per-epoch accuracy → per-engine throughput comparison +
+work-ratio report → checkpoint/restore round-trip through the shared
+checkpointer.
 """
 import argparse
 import time
@@ -15,8 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.core import TMConfig
-from repro.core.driver import TMDriver
+from repro.core import TMConfig, TsetlinMachine, registered_engines
 from repro.core.indexing import dense_work, indexed_work
 from repro.data.synthetic import binarized_images
 
@@ -29,6 +29,8 @@ def main():
     ap.add_argument("--train", type=int, default=2048)
     ap.add_argument("--test", type=int, default=512)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_tm_ckpt")
+    ap.add_argument("--engines", default=None,
+                    help="comma-separated engine names (default: registry)")
     args = ap.parse_args()
 
     cfg = TMConfig(n_classes=10, n_clauses=args.clauses,
@@ -39,39 +41,44 @@ def main():
     x_tr = jnp.asarray(x[:args.train]); y_tr = jnp.asarray(y[:args.train])
     x_te = jnp.asarray(x[args.train:]); y_te = jnp.asarray(y[args.train:])
 
-    driver = TMDriver.create(cfg)
+    engines = (tuple(args.engines.split(",")) if args.engines
+               else registered_engines())
+    machine = TsetlinMachine(cfg, engines=engines, seed=42).init()
     ckpt = Checkpointer(args.ckpt_dir, keep=2)
-    key = jax.random.key(42)
 
     for epoch in range(args.epochs):
-        key, sub = jax.random.split(key)
         t0 = time.time()
-        driver.train_batch(x_tr, y_tr, sub)
+        machine.partial_fit(x_tr, y_tr)
         dt = time.time() - t0
-        acc = driver.accuracy(x_te, y_te, engine="indexed")
+        acc = machine.evaluate(x_te, y_te, engine="indexed")
         print(f"epoch {epoch}: acc={acc:.3f}  "
               f"train {args.train/dt:.0f} samples/s")
-        ckpt.save(epoch, driver.as_pytree(), blocking=True)
+        ckpt.save(epoch, machine.as_pytree(), blocking=True)
 
-    # inference engine comparison (the paper's Table-4 style measurement)
+    # inference engine comparison (the paper's Table-4 style measurement),
+    # driven through the registry — new engines show up automatically
     print("\ninference engines on", args.test, "samples:")
-    for engine in ("dense", "bitpack", "compact", "indexed"):
-        fn = lambda xx: driver.scores(xx, engine=engine)
+    for engine in engines:
+        fn = lambda xx: machine.scores(xx, engine=engine)
         jax.block_until_ready(fn(x_te))  # compile
         t0 = time.time()
         jax.block_until_ready(fn(x_te))
         us = (time.time() - t0) / args.test * 1e6
-        print(f"  {engine:8s}: {us:8.1f} us/sample")
+        print(f"  {engine:12s}: {us:8.1f} us/sample")
 
-    w = float(np.asarray(indexed_work(driver.index, x_te)).mean())
+    idx = machine.bundle.caches.get("indexed")
+    if idx is None:  # --engines excluded 'indexed': build once for the report
+        from repro.core import get_engine
+        idx = get_engine("indexed").prepare(cfg, machine.state)
+    w = float(np.asarray(indexed_work(idx, x_te)).mean())
     print(f"\nwork ratio: {w / dense_work(cfg):.4f} "
           "(paper reports ≈0.02 on trained MNIST TMs)")
 
     # checkpoint round-trip
-    restored = TMDriver.create(cfg).load_pytree(
-        ckpt.restore(ckpt.latest_step(), driver.as_pytree()))
+    restored = TsetlinMachine(cfg).load_pytree(
+        ckpt.restore(ckpt.latest_step(), machine.as_pytree()))
     same = bool(jnp.all(restored.predict(x_te, engine="indexed")
-                        == driver.predict(x_te, engine="indexed")))
+                        == machine.predict(x_te, engine="indexed")))
     print("checkpoint restore round-trip:", "ok" if same else "MISMATCH")
 
 

@@ -23,6 +23,7 @@ from repro.core.indexing import (
     apply_events,
     build_index,
     compact,
+    compact_apply_events,
     compact_eval,
     compact_scores,
     delete,
@@ -33,6 +34,22 @@ from repro.core.indexing import (
     indexed_work,
     insert,
     validate,
+    validate_compact,
+)
+from repro.core.engines import (
+    EvalEngine,
+    get_engine,
+    register_engine,
+    registered_engines,
+)
+from repro.core.api import (
+    TMBundle,
+    TsetlinMachine,
+    bundle_predict,
+    bundle_scores,
+    init_bundle,
+    train_step,
+    train_step_jit,
 )
 
 __all__ = [
@@ -40,7 +57,10 @@ __all__ = [
     "literals_from_input", "accuracy", "clause_votes", "dense_clause_outputs",
     "predict", "scores", "update_batch_parallel", "update_batch_sequential",
     "update_sample", "ClauseIndex", "CompactClauses", "apply_events",
-    "build_index", "compact", "compact_eval", "compact_scores", "delete",
-    "dense_work", "empty_index", "events_from_transition", "indexed_scores",
-    "indexed_work", "insert", "validate",
+    "build_index", "compact", "compact_apply_events", "compact_eval",
+    "compact_scores", "delete", "dense_work", "empty_index",
+    "events_from_transition", "indexed_scores", "indexed_work", "insert",
+    "validate", "validate_compact", "EvalEngine", "get_engine", "register_engine",
+    "registered_engines", "TMBundle", "TsetlinMachine", "bundle_predict",
+    "bundle_scores", "init_bundle", "train_step", "train_step_jit",
 ]

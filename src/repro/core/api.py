@@ -1,0 +1,286 @@
+"""Jit-native TM estimator API: ``TMBundle`` + ``TsetlinMachine``.
+
+Layering (DESIGN.md):
+
+  * ``TMBundle`` — a registered pytree bundling the static ``TMConfig``
+    (treedef aux data, so jit re-traces per config, never per state) with the
+    learnable ``TMState`` and the per-``cache_key`` engine caches. One value
+    carries everything needed to train *and* serve through any engine.
+  * ``train_step(bundle, xs, ys, rng) -> bundle`` — a pure function: dense
+    TA feedback, include-mask diff into a fixed-shape event buffer, then
+    every cache in the bundle absorbs the events incrementally through its
+    registry provider. ``jax.jit``s end-to-end; no Python-level mutation, no
+    host sync inside the step. ``train_step_jit`` donates the input bundle
+    (on backends that support donation) so TA states update in place.
+  * ``TsetlinMachine`` — a thin stateful facade (init / fit / partial_fit /
+    predict / scores / evaluate) for scripts and examples; all real work is
+    in the pure functions, which distributed/serving code calls directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import indexing, tm
+from repro.core.engines import cache_provider, get_engine, registered_engines
+from repro.core.types import TMConfig, TMState, include_mask, init_tm
+
+DEFAULT_ENGINE = "indexed"
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class TMBundle:
+    """Static config + TA state + engine caches, as one jit-friendly pytree."""
+
+    cfg: TMConfig
+    state: TMState
+    caches: dict[str, Any]
+
+    def tree_flatten(self):
+        return (self.state, self.caches), self.cfg
+
+    @classmethod
+    def tree_unflatten(cls, cfg, children):
+        state, caches = children
+        return cls(cfg=cfg, state=state, caches=caches)
+
+    @property
+    def index(self) -> indexing.ClauseIndex:
+        """The paper's clause index (present when the indexed engine is on)."""
+        return self.caches["indexed"]
+
+
+def _cache_keys(engine_names: Iterable[str]) -> tuple[str, ...]:
+    keys: dict[str, None] = {}
+    for name in engine_names:
+        eng = get_engine(name)
+        if eng.needs_cache:  # cache-less engines read bundle.state directly
+            keys.setdefault(eng.cache_key, None)
+    return tuple(keys)
+
+
+def init_bundle(
+    cfg: TMConfig,
+    *,
+    engines: Iterable[str] | None = None,
+    state: TMState | None = None,
+    rng: jax.Array | None = None,
+) -> TMBundle:
+    """Fresh bundle with caches prepared for the requested engines.
+
+    ``engines=None`` prepares every registered engine — each *distinct*
+    ``cache_key`` is built once (``bitpack``/``bitpack_xla`` share).
+    """
+    names = tuple(engines) if engines is not None else registered_engines()
+    state = state if state is not None else init_tm(cfg, rng)
+    caches = {key: cache_provider(key).prepare(cfg, state)
+              for key in _cache_keys(names)}
+    return TMBundle(cfg=cfg, state=state, caches=caches)
+
+
+def bundle_scores(
+    bundle: TMBundle, x: jax.Array, *, engine: str = DEFAULT_ENGINE
+) -> jax.Array:
+    """(B, o) → (B, m) scores via a registered engine (pure, jittable).
+
+    Uses the bundle's maintained cache when present; otherwise prepares one
+    on the fly (still pure — just does rebuild work per call).
+    """
+    eng = get_engine(engine)
+    cache = bundle.caches.get(eng.cache_key)
+    if cache is None:
+        cache = eng.prepare(bundle.cfg, bundle.state)
+    return eng.scores(bundle.cfg, cache, x)
+
+
+def bundle_predict(
+    bundle: TMBundle, x: jax.Array, *, engine: str = DEFAULT_ENGINE
+) -> jax.Array:
+    return jnp.argmax(bundle_scores(bundle, x, engine=engine), axis=-1)
+
+
+def sync_caches(bundle: TMBundle, new_state: TMState,
+                events: indexing.Event) -> TMBundle:
+    """New bundle whose caches absorbed ``events`` via their providers."""
+    caches = {key: cache_provider(key).update_cache(
+                  bundle.cfg, cache, new_state, events)
+              for key, cache in bundle.caches.items()}
+    return TMBundle(cfg=bundle.cfg, state=new_state, caches=caches)
+
+
+def train_step(
+    bundle: TMBundle,
+    xs: jax.Array,
+    ys: jax.Array,
+    rng: jax.Array,
+    *,
+    parallel: bool = False,
+    max_events: int = 4096,
+) -> TMBundle:
+    """One learning step over a batch; every engine cache stays in sync.
+
+    Pure function of its inputs: dense Type I/II feedback (sequential scan,
+    or the batch-parallel approximation when ``parallel=True``), then the
+    include-mask diff replays into each cache as a fixed-shape masked event
+    buffer (≤ ``max_events`` boundary crossings per batch — overflow drops
+    events and is a config error; size it like the seed driver did).
+    """
+    cfg = bundle.cfg
+    old_inc = include_mask(cfg, bundle.state)
+    update = (tm.update_batch_parallel if parallel
+              else tm.update_batch_sequential)
+    new_state = update(cfg, bundle.state, xs, ys, rng)
+    events = indexing.events_from_transition(
+        old_inc, include_mask(cfg, new_state), max_events)
+    return sync_caches(bundle, new_state, events)
+
+
+# Donation updates TA states/caches in place on accelerators; the CPU backend
+# does not implement buffer donation (XLA warns and copies). The decision is
+# made lazily per backend at first call — resolving it at import time would
+# both force backend initialization as an import side effect and freeze the
+# choice before the program can configure its platform.
+_TRAIN_STEP_JIT: dict[str, Any] = {}
+
+
+def train_step_jit(bundle, xs, ys, rng, *, parallel: bool = False,
+                   max_events: int = 4096):
+    """``train_step`` under ``jax.jit``, donating the input bundle on
+    backends that implement donation. NOTE: where donation applies
+    (GPU/TPU), the input bundle's buffers are consumed — do not read it
+    after the call; use the pure ``train_step`` if you need both."""
+    backend = jax.default_backend()
+    fn = _TRAIN_STEP_JIT.get(backend)
+    if fn is None:
+        fn = jax.jit(train_step, static_argnames=("parallel", "max_events"),
+                     donate_argnums=(0,) if backend != "cpu" else ())
+        _TRAIN_STEP_JIT[backend] = fn
+    return fn(bundle, xs, ys, rng, parallel=parallel, max_events=max_events)
+
+
+# module-level so the XLA compilation cache is shared across estimator
+# instances (a fresh load_pytree'd machine reuses the compiled graphs)
+_scores_jit = jax.jit(bundle_scores, static_argnames=("engine",))
+
+
+class TsetlinMachine:
+    """Estimator facade over the pure bundle functions.
+
+    >>> machine = TsetlinMachine(cfg).init()
+    >>> machine.fit(xs, ys, epochs=3)
+    >>> machine.predict(x_test, engine="indexed")
+
+    Every heavy call delegates to jitted pure functions of the bundle; the
+    facade only owns the bundle reference and the RNG chain.
+    """
+
+    def __init__(
+        self,
+        cfg: TMConfig,
+        *,
+        engines: Iterable[str] | None = None,
+        parallel: bool = False,
+        max_events_per_batch: int = 4096,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.engines = (tuple(engines) if engines is not None
+                        else registered_engines())
+        self.parallel = parallel
+        self.max_events_per_batch = max_events_per_batch
+        self._key = jax.random.key(seed)
+        self.bundle: TMBundle | None = None
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def init(self, rng: jax.Array | None = None) -> "TsetlinMachine":
+        self.bundle = init_bundle(self.cfg, engines=self.engines, rng=rng)
+        return self
+
+    def _ensure_bundle(self) -> TMBundle:
+        if self.bundle is None:
+            self.init()
+        return self.bundle
+
+    def _next_key(self, rng: jax.Array | None) -> jax.Array:
+        if rng is not None:
+            return rng
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- learning -----------------------------------------------------------
+
+    def partial_fit(self, xs, ys, rng: jax.Array | None = None) -> "TsetlinMachine":
+        """One jitted train step over a batch (all engine caches kept in sync)."""
+        bundle = self._ensure_bundle()
+        self.bundle = train_step_jit(
+            bundle, xs, ys, self._next_key(rng),
+            parallel=self.parallel, max_events=self.max_events_per_batch)
+        return self
+
+    def fit(self, xs, ys, *, epochs: int = 1, batch_size: int | None = None,
+            rng: jax.Array | None = None) -> "TsetlinMachine":
+        """Epoch loop of ``partial_fit``; fixed-size minibatches when
+        ``batch_size`` is set (a trailing partial batch is dropped so every
+        step reuses one compiled shape)."""
+        if batch_size is not None and xs.shape[0] < batch_size:
+            raise ValueError(
+                f"batch_size={batch_size} exceeds dataset size "
+                f"{xs.shape[0]}: fit would perform zero steps")
+        key = self._next_key(rng)
+        for _ in range(epochs):
+            if batch_size is None:
+                key, sub = jax.random.split(key)
+                self.partial_fit(xs, ys, sub)
+            else:
+                for start in range(0, xs.shape[0] - batch_size + 1, batch_size):
+                    key, sub = jax.random.split(key)
+                    self.partial_fit(xs[start:start + batch_size],
+                                     ys[start:start + batch_size], sub)
+        return self
+
+    # -- inference ----------------------------------------------------------
+
+    def scores(self, xs, *, engine: str = DEFAULT_ENGINE) -> jax.Array:
+        return _scores_jit(self._ensure_bundle(), xs, engine=engine)
+
+    def predict(self, xs, *, engine: str = DEFAULT_ENGINE) -> jax.Array:
+        return jnp.argmax(self.scores(xs, engine=engine), axis=-1)
+
+    def evaluate(self, xs, ys, *, engine: str = DEFAULT_ENGINE) -> float:
+        return float(jnp.mean(
+            (self.predict(xs, engine=engine) == ys).astype(jnp.float32)))
+
+    # -- state access / persistence -----------------------------------------
+
+    @property
+    def state(self) -> TMState:
+        return self._ensure_bundle().state
+
+    @property
+    def index(self) -> indexing.ClauseIndex:
+        return self._ensure_bundle().index
+
+    def as_pytree(self) -> dict:
+        """Checkpoint payload (same schema as the legacy driver)."""
+        bundle = self._ensure_bundle()
+        idx = bundle.caches.get("indexed")
+        if idx is None:
+            idx = get_engine("indexed").prepare(bundle.cfg, bundle.state)
+        return {"ta_state": bundle.state.ta_state,
+                "lists": idx.lists, "counts": idx.counts, "pos": idx.pos}
+
+    def load_pytree(self, tree: dict) -> "TsetlinMachine":
+        """Restore TA state + index; remaining caches re-prepare from state."""
+        state = TMState(ta_state=tree["ta_state"])
+        restored = indexing.ClauseIndex(
+            lists=tree["lists"], counts=tree["counts"], pos=tree["pos"])
+        caches = {key: (restored if key == "indexed"
+                        else cache_provider(key).prepare(self.cfg, state))
+                  for key in _cache_keys(self.engines)}
+        self.bundle = TMBundle(cfg=self.cfg, state=state, caches=caches)
+        return self

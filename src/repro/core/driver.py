@@ -1,97 +1,128 @@
-"""TM training/serving driver — the paper's system glued to the substrate.
+"""DEPRECATED: ``TMDriver`` is a thin shim over the engine-registry API.
 
-Maintains the dense TA states (TPU-friendly learning) AND the paper's
-clause index, kept in sync event-wise after every batch (O(1) per boundary
-crossing — core/indexing.py). Inference can run through any engine:
-
-  * "dense"    — exhaustive baseline (paper's comparison point)
-  * "bitpack"  — Pallas fused eval+vote kernel
-  * "compact"  — gather over included literals (sparsity-proportional work)
-  * "indexed"  — the paper's falsification index (Eq. 4)
-
-Checkpointing reuses repro.checkpoint (TA states + index are one pytree).
+Use ``repro.core.api.TsetlinMachine`` (estimator facade) or the pure
+functions ``repro.core.api.train_step`` / ``bundle_scores`` directly. This
+shim keeps the seed's surface (``create`` / ``train_batch`` / ``scores`` /
+``predict`` / ``accuracy`` / ``as_pytree`` / ``load_pytree``) alive for old
+scripts; all dispatch now goes through ``repro.core.engines`` — there is no
+per-engine ``if/elif`` and no host sync left here.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import indexing, tm
-from repro.core.types import TMConfig, TMState, include_mask, init_tm
-from repro.kernels import ops as kops
+from repro.core import api, indexing
+from repro.core.engines import cache_provider, get_engine
+from repro.core.types import TMConfig, TMState, init_tm
 
 
-@dataclasses.dataclass
 class TMDriver:
-    cfg: TMConfig
-    state: TMState
-    index: indexing.ClauseIndex
-    max_events_per_batch: int = 4096
+    """Legacy facade; state lives in an ``api.TMBundle``."""
+
+    def __init__(self, cfg: TMConfig, state: TMState | None = None,
+                 index: indexing.ClauseIndex | None = None,
+                 max_events_per_batch: int = 4096):
+        warnings.warn(
+            "TMDriver is deprecated; use repro.core.api.TsetlinMachine "
+            "(or the pure train_step/bundle_scores functions).",
+            DeprecationWarning, stacklevel=2)
+        state = state if state is not None else init_tm(cfg)
+        # Legacy semantics: only the paper's index is maintained event-wise;
+        # every other engine evaluates fresh from the current state (so
+        # sync_index=False leaves only the index stale, exactly as before).
+        caches = {"indexed": (index if index is not None
+                              else get_engine("indexed").prepare(cfg, state))}
+        self.bundle = api.TMBundle(cfg=cfg, state=state, caches=caches)
+        self.max_events_per_batch = max_events_per_batch
 
     @staticmethod
     def create(cfg: TMConfig, capacity: int | None = None) -> "TMDriver":
-        cap = capacity or cfg.n_clauses
-        return TMDriver(cfg=cfg, state=init_tm(cfg),
-                        index=indexing.empty_index(cfg, cap))
+        if capacity is not None:
+            import dataclasses
+            cfg = dataclasses.replace(cfg, index_capacity=capacity)
+        return TMDriver(cfg=cfg)
+
+    # -- legacy attribute surface ---------------------------------------------
+
+    @property
+    def cfg(self) -> TMConfig:
+        return self.bundle.cfg
+
+    @property
+    def state(self) -> TMState:
+        return self.bundle.state
+
+    @state.setter
+    def state(self, state: TMState):
+        # rebuild only the caches this bundle carries, preserving their
+        # capacities (a caller-supplied index may be tighter than cfg's)
+        cfg = self.bundle.cfg
+        caches = {}
+        for key, old in self.bundle.caches.items():
+            if key == "indexed":
+                caches[key] = indexing.build_index(cfg, state, old.capacity)
+            else:
+                caches[key] = cache_provider(key).prepare(cfg, state)
+        self.bundle = api.TMBundle(cfg=cfg, state=state, caches=caches)
+
+    @property
+    def index(self) -> indexing.ClauseIndex:
+        return self.bundle.index
 
     # -- learning -------------------------------------------------------------
 
     def train_batch(self, xs, ys, rng, *, parallel: bool = False,
                     sync_index: bool = True):
-        old_inc = include_mask(self.cfg, self.state)
-        upd = (tm.update_batch_parallel if parallel
-               else tm.update_batch_sequential)
-        self.state = upd(self.cfg, self.state, xs, ys, rng)
         if sync_index:
-            new_inc = include_mask(self.cfg, self.state)
-            events = indexing.events_from_transition(
-                old_inc, new_inc, self.max_events_per_batch)
-            self.index = indexing.apply_events(self.index, events)
+            self.bundle = api.train_step_jit(
+                self.bundle, xs, ys, rng, parallel=parallel,
+                max_events=self.max_events_per_batch)
+        else:
+            # states only; caches go stale (legacy behaviour of sync_index=False)
+            from repro.core import tm
+            upd = (tm.update_batch_parallel if parallel
+                   else tm.update_batch_sequential)
+            new_state = upd(self.bundle.cfg, self.bundle.state, xs, ys, rng)
+            self.bundle = api.TMBundle(cfg=self.bundle.cfg, state=new_state,
+                                       caches=self.bundle.caches)
         return self
 
     def rebuild_index(self):
-        self.index = indexing.build_index(self.cfg, self.state,
-                                          self.index.capacity)
+        caches = dict(self.bundle.caches)
+        caches["indexed"] = get_engine("indexed").prepare(
+            self.bundle.cfg, self.bundle.state)
+        self.bundle = api.TMBundle(cfg=self.bundle.cfg,
+                                   state=self.bundle.state, caches=caches)
         return self
 
-    # -- inference ------------------------------------------------------------
+    # -- inference (registry dispatch) ----------------------------------------
 
-    def scores(self, xs, *, engine: str = "indexed"):
-        if engine == "dense":
-            return tm.scores(self.cfg, self.state, xs)
-        if engine == "bitpack":
-            return kops.tm_votes(self.cfg, self.state, xs)
-        if engine == "bitpack_xla":
-            return tm.bitpacked_scores(self.cfg, self.state, xs)
-        if engine == "compact":
-            lmax = int(np.asarray(
-                include_mask(self.cfg, self.state).sum(-1)).max())
-            comp = indexing.compact(self.cfg, self.state, max(lmax, 1))
-            return indexing.compact_scores(self.cfg, comp, xs)
-        if engine == "indexed":
-            return indexing.indexed_scores(self.cfg, self.index, xs)
-        raise ValueError(engine)
+    def scores(self, xs, *, engine: str = api.DEFAULT_ENGINE):
+        return api.bundle_scores(self.bundle, xs, engine=engine)
 
-    def predict(self, xs, *, engine: str = "indexed"):
+    def predict(self, xs, *, engine: str = api.DEFAULT_ENGINE):
         return jnp.argmax(self.scores(xs, engine=engine), axis=-1)
 
-    def accuracy(self, xs, ys, *, engine: str = "indexed") -> float:
+    def accuracy(self, xs, ys, *, engine: str = api.DEFAULT_ENGINE) -> float:
         return float(jnp.mean(
             (self.predict(xs, engine=engine) == ys).astype(jnp.float32)))
 
     # -- persistence ----------------------------------------------------------
 
     def as_pytree(self):
+        idx = self.index
         return {"ta_state": self.state.ta_state,
-                "lists": self.index.lists,
-                "counts": self.index.counts,
-                "pos": self.index.pos}
+                "lists": idx.lists, "counts": idx.counts, "pos": idx.pos}
 
     def load_pytree(self, tree):
-        self.state = TMState(ta_state=tree["ta_state"])
-        self.index = indexing.ClauseIndex(
+        state = TMState(ta_state=tree["ta_state"])
+        restored = indexing.ClauseIndex(
             lists=tree["lists"], counts=tree["counts"], pos=tree["pos"])
+        caches = {key: (restored if key == "indexed"
+                        else cache_provider(key).prepare(self.bundle.cfg, state))
+                  for key in self.bundle.caches}
+        self.bundle = api.TMBundle(cfg=self.bundle.cfg, state=state,
+                                   caches=caches)
         return self

@@ -1,0 +1,247 @@
+"""Evaluation-engine registry — one TM, many interchangeable eval strategies.
+
+The paper's point is that a trained TM admits several semantically identical
+evaluation strategies with very different work profiles (exhaustive vs the
+falsification index, Gorji et al. 2020); the Massively Parallel TM line
+(Abeyrathna et al. 2020) shows that decoupling clause *evaluation* from TA
+*state storage* is what unlocks scaling. This module is that API boundary:
+
+  * ``EvalEngine`` — ``prepare(cfg, state) -> cache`` builds the engine's
+    pytree cache (packed include words, ``CompactClauses``, ``ClauseIndex``);
+    ``scores(cfg, cache, x)`` evaluates from the cache alone;
+    ``update_cache(cfg, cache, state, events)`` absorbs include/exclude
+    boundary crossings *incrementally* so learning never rebuilds or
+    host-syncs a cache per step.
+  * ``register_engine`` / ``get_engine`` / ``registered_engines`` — the
+    registry. ``dense``, ``bitpack`` (Pallas), ``bitpack_xla``, ``compact``
+    and ``indexed`` register at import; new engines (sharded, weighted, …)
+    plug in without touching the estimator, the shim, the parity tests or
+    the benchmarks — all of which iterate the registry.
+
+Engines that derive the *same* cache share it via ``cache_key`` (``bitpack``
+and ``bitpack_xla`` both read the packed include words), so a ``TMBundle``
+stores and maintains each distinct cache once.
+
+Every method is pure and jit-compatible: cache shapes are static functions
+of ``TMConfig`` (``resolved_index_capacity`` / ``resolved_clause_capacity``),
+never of the data — the seed's ``np.asarray(include_mask(...)).max()`` host
+round-trip at inference time is gone.
+
+Score semantics: all engines implement the paper's Eq. 4 convention (empty /
+never-falsified clauses count as true). With ``cfg.empty_clause_output == 1``
+(the default) every engine returns *identical* scores; with 0 only ``dense``
+follows the classic convention and the others still agree on ``argmax`` in
+the usual case (tests pin the score identity in paper mode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import indexing, tm
+from repro.core.bitpack import WORD, pack_bits
+from repro.core.indexing import Event
+from repro.core.types import TMConfig, TMState, include_mask
+from repro.kernels import ops as kops
+
+
+class EvalEngine:
+    """Base class for evaluation engines. Subclass + ``register_engine``.
+
+    ``name``        — registry key, the user-facing engine string.
+    ``cache_key``   — storage key inside a ``TMBundle``; engines with the same
+                      ``cache_key`` must build byte-identical caches (they are
+                      prepared and maintained once, by the first registrant).
+    ``needs_cache`` — False when ``prepare`` is the identity over state the
+                      bundle already carries; such engines never store a cache
+                      (storing one would alias ``state``'s buffers inside the
+                      same pytree, which breaks donation — a donated bundle
+                      must not donate one buffer through two leaves).
+    """
+
+    name: str = ""
+    cache_key: str = ""
+    needs_cache: bool = True
+
+    def prepare(self, cfg: TMConfig, state: TMState):
+        """Build this engine's cache pytree from scratch (pure, jittable)."""
+        raise NotImplementedError
+
+    def scores(self, cfg: TMConfig, cache, x: jax.Array) -> jax.Array:
+        """(B, o) inputs → (B, m) class scores from the cache alone."""
+        raise NotImplementedError
+
+    def update_cache(self, cfg: TMConfig, cache, state: TMState,
+                     events: Event):
+        """Absorb TA boundary crossings; default falls back to a rebuild.
+
+        ``state`` is the *post*-update TA state; ``events`` the include-mask
+        diff that produced it (``indexing.events_from_transition``). Caches
+        must have been in sync with the pre-update state — the TMBundle sync
+        contract (DESIGN.md §3).
+        """
+        del events
+        return self.prepare(cfg, state)
+
+
+_REGISTRY: dict[str, EvalEngine] = {}
+_CACHE_PROVIDERS: dict[str, EvalEngine] = {}
+
+
+def register_engine(engine: EvalEngine) -> EvalEngine:
+    """Add an engine instance to the registry (idempotent per name)."""
+    if not engine.name:
+        raise ValueError("engine must set a non-empty .name")
+    if not engine.cache_key:
+        engine.cache_key = engine.name
+    _REGISTRY[engine.name] = engine
+    # first registrant for a cache_key owns prepare/update for it
+    _CACHE_PROVIDERS.setdefault(engine.cache_key, engine)
+    return engine
+
+
+def get_engine(name: str) -> EvalEngine:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown engine {name!r}; registered: {registered_engines()}"
+        ) from None
+
+
+def registered_engines() -> tuple[str, ...]:
+    """Registered engine names, registration order."""
+    return tuple(_REGISTRY)
+
+
+def cache_provider(cache_key: str) -> EvalEngine:
+    """The engine that owns prepare/update for a given cache slot."""
+    return _CACHE_PROVIDERS[cache_key]
+
+
+# ---------------------------------------------------------------------------
+# dense — exhaustive evaluation (the paper's baseline)
+# ---------------------------------------------------------------------------
+
+
+class DenseEngine(EvalEngine):
+    """Exhaustive eval straight off the TA state; the cache *is* the state,
+    so no cache is ever stored (``needs_cache=False``) — ``bundle_scores``
+    falls through to the zero-cost ``prepare``."""
+
+    name = "dense"
+    needs_cache = False
+
+    def prepare(self, cfg: TMConfig, state: TMState) -> TMState:
+        return state
+
+    def scores(self, cfg: TMConfig, cache: TMState, x: jax.Array) -> jax.Array:
+        return tm.scores(cfg, cache, x)
+
+    def update_cache(self, cfg, cache, state, events):
+        del events
+        return state  # zero-copy: the new state is the new cache
+
+
+# ---------------------------------------------------------------------------
+# bitpack / bitpack_xla — 32×-packed include words (shared cache)
+# ---------------------------------------------------------------------------
+
+
+def packed_include_apply_events(words: jax.Array, events: Event) -> jax.Array:
+    """Flip include bits for a masked event buffer, one scatter-add.
+
+    Events from ``events_from_transition`` touch *distinct* (i, j, k) cells
+    and always cross the boundary in the stated direction (insert: bit is 0,
+    delete: bit is 1), so per-word bit deltas sum without carries and the
+    whole buffer lands in a single vectorised scatter — no scan.
+    """
+    word = events.literal // WORD
+    bit = (events.literal % WORD).astype(jnp.uint32)
+    mask = (jnp.uint32(1) << bit).astype(jnp.uint32)
+    sign = jnp.where(events.is_insert, jnp.uint32(1), jnp.uint32(0xFFFFFFFF))
+    delta = jnp.where(events.valid, mask * sign, jnp.uint32(0))
+    return words.at[events.cls, events.clause, word].add(delta, mode="drop")
+
+
+class _PackedEngineBase(EvalEngine):
+    cache_key = "bitpack"
+
+    def prepare(self, cfg: TMConfig, state: TMState) -> jax.Array:
+        return pack_bits(include_mask(cfg, state).astype(jnp.uint8))
+
+    def update_cache(self, cfg, cache, state, events):
+        del state
+        return packed_include_apply_events(cache, events)
+
+
+class BitpackEngine(_PackedEngineBase):
+    """Fused Pallas eval+vote kernel over the packed words."""
+
+    name = "bitpack"
+
+    def __init__(self, interpret: bool = True):
+        # interpret-mode on CPU containers; pass False on real TPUs
+        self.interpret = interpret
+
+    def scores(self, cfg, cache, x):
+        return kops.tm_votes_packed(cache, x, interpret=self.interpret)
+
+
+class BitpackXLAEngine(_PackedEngineBase):
+    """Same packed layout, pure-XLA evaluation (CPU-executable fast path)."""
+
+    name = "bitpack_xla"
+
+    def scores(self, cfg, cache, x):
+        return tm.bitpacked_scores_packed(cfg, cache, x)
+
+
+# ---------------------------------------------------------------------------
+# compact — gather over included literals (work ∝ Σ clause lengths)
+# ---------------------------------------------------------------------------
+
+
+class CompactEngine(EvalEngine):
+    """Clause-compact transpose layout; ℓ_max is static from the config
+    (``cfg.resolved_clause_capacity``), not a data-dependent host sync."""
+
+    name = "compact"
+
+    def prepare(self, cfg: TMConfig, state: TMState) -> indexing.CompactClauses:
+        return indexing.compact(cfg, state, cfg.resolved_clause_capacity)
+
+    def scores(self, cfg, cache, x):
+        return indexing.compact_scores(cfg, cache, x)
+
+    def update_cache(self, cfg, cache, state, events):
+        del state
+        return indexing.compact_apply_events(cache, events)
+
+
+# ---------------------------------------------------------------------------
+# indexed — the paper's falsification index (Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+class IndexedEngine(EvalEngine):
+    """Inclusion lists + O(1) swap-with-last maintenance (paper §3)."""
+
+    name = "indexed"
+
+    def prepare(self, cfg: TMConfig, state: TMState) -> indexing.ClauseIndex:
+        return indexing.build_index(cfg, state, cfg.resolved_index_capacity)
+
+    def scores(self, cfg, cache, x):
+        return indexing.indexed_scores(cfg, cache, x)
+
+    def update_cache(self, cfg, cache, state, events):
+        del state
+        return indexing.apply_events(cache, events)
+
+
+register_engine(DenseEngine())
+register_engine(BitpackEngine())
+register_engine(BitpackXLAEngine())
+register_engine(CompactEngine())
+register_engine(IndexedEngine())

@@ -303,3 +303,78 @@ def compact_scores(cfg: TMConfig, comp: CompactClauses, x: jax.Array) -> jax.Arr
     from repro.core.tm import clause_votes
 
     return clause_votes(cfg, compact_eval(cfg, comp, x))
+
+
+def compact_apply_events(comp: CompactClauses, events: Event) -> CompactClauses:
+    """Replay include/exclude events on the clause-compact layout.
+
+    The transpose of ``apply_events``: rows are *clauses* holding literal ids,
+    so an insert appends the literal, a delete is the same swap-with-last the
+    paper uses for its lists. Rows are sets — ``compact_eval`` is order-blind —
+    so event replay and a fresh ``compact()`` build agree up to row order.
+
+    Contract (the TMBundle sync contract, DESIGN.md): events must be diffed
+    against exactly the state this cache was built from. Capacity overflow
+    loses the overflowing literal (a config error, surfaced by
+    ``validate_compact``) but never corrupts surviving entries: an insert
+    past ``ℓ_max`` leaves ``lengths`` clamped, and a delete of a literal the
+    row never absorbed is a no-op.
+    """
+    l_max = comp.lit_idx.shape[-1]
+
+    def body(c, ev):
+        def do_insert(c):
+            slot = c.lengths[ev.cls, ev.clause]
+            fits = slot < l_max
+            lit_idx = c.lit_idx.at[ev.cls, ev.clause, slot].set(
+                ev.literal.astype(jnp.int32), mode="drop")
+            lengths = c.lengths.at[ev.cls, ev.clause].add(
+                jnp.where(fits, 1, 0))
+            return CompactClauses(lit_idx=lit_idx, lengths=lengths)
+
+        def do_delete(c):
+            row = c.lit_idx[ev.cls, ev.clause]            # (l_max,)
+            hit = row == ev.literal.astype(jnp.int32)
+            present = jnp.any(hit)
+            p = jnp.argmax(hit)
+            last = c.lengths[ev.cls, ev.clause] - 1
+            moved = row[last]
+            lit_idx = c.lit_idx.at[ev.cls, ev.clause, p].set(
+                jnp.where(present, moved, row[p]))
+            lit_idx = lit_idx.at[ev.cls, ev.clause, last].set(
+                jnp.where(present, NA, moved))
+            lengths = c.lengths.at[ev.cls, ev.clause].add(
+                jnp.where(present, -1, 0))
+            return CompactClauses(lit_idx=lit_idx, lengths=lengths)
+
+        def do(c):
+            return jax.lax.cond(ev.is_insert, do_insert, do_delete, c)
+
+        return jax.lax.cond(ev.valid, do, lambda c: c, c), None
+
+    out, _ = jax.lax.scan(body, comp, events)
+    return out
+
+
+def validate_compact(cfg: TMConfig, state: TMState,
+                     comp: CompactClauses) -> dict:
+    """Invariant checks for the clause-compact layout (cf. ``validate``).
+
+    ``lengths_ok`` fails when capacity overflow has lost literals —
+    ``lengths`` can only track true clause lengths while they fit ℓ_max.
+    """
+    inc = include_mask(cfg, state)                       # (m, n, 2o)
+    true_lengths = inc.sum(-1).astype(jnp.int32)
+    lengths_ok = jnp.all(comp.lengths == true_lengths)
+    overflow_ok = jnp.all(comp.lengths <= comp.lit_idx.shape[-1])
+    # membership: every non-NA entry is an included literal of its clause
+    m, n, L = inc.shape
+    safe = jnp.where(comp.lit_idx == NA, 0, comp.lit_idx)
+    back = inc[jnp.arange(m)[:, None, None],
+               jnp.arange(n)[None, :, None], safe]       # (m, n, l_max)
+    member_ok = jnp.all(jnp.where(comp.lit_idx != NA, back, True))
+    slot_valid = (jnp.arange(comp.lit_idx.shape[-1])[None, None, :]
+                  < comp.lengths[..., None])
+    padding_ok = jnp.all(jnp.where(slot_valid, True, comp.lit_idx == NA))
+    return dict(lengths_ok=lengths_ok, overflow_ok=overflow_ok,
+                member_ok=member_ok, padding_ok=padding_ok)

@@ -71,6 +71,23 @@ def predict(cfg: TMConfig, state: TMState, x: jax.Array) -> jax.Array:
     return jnp.argmax(scores(cfg, state, x), axis=-1)
 
 
+def bitpacked_scores_packed(
+    cfg: TMConfig, include_packed: jax.Array, x: jax.Array
+) -> jax.Array:
+    """XLA bit-packed eval from a *prepared* packed-include cache.
+
+    ``include_packed``: (m, n, W) uint32 — e.g. the ``bitpack`` engine cache
+    kept in sync event-wise by the registry (core/engines.py), so inference
+    never repacks the full include mask.
+    """
+    from repro.core.bitpack import packed_literals
+
+    lit = packed_literals(x)                                     # (B,W)
+    viol = include_packed[None] & (~lit)[:, None, None]          # (B,m,n,W)
+    out = ~jnp.any(viol != 0, axis=-1)                           # (B,m,n)
+    return clause_votes(cfg, out.astype(jnp.uint8))
+
+
 def bitpacked_scores(cfg: TMConfig, state: TMState, x: jax.Array) -> jax.Array:
     """Dense eval over 32×-packed words, pure XLA (no Pallas).
 
@@ -80,13 +97,10 @@ def bitpacked_scores(cfg: TMConfig, state: TMState, x: jax.Array) -> jax.Array:
     Memory traffic vs the f32-matmul dense baseline drops ~128×
     (uint32 words vs f32 per literal).
     """
-    from repro.core.bitpack import pack_bits, packed_literals
+    from repro.core.bitpack import pack_bits
 
     inc = pack_bits(include_mask(cfg, state).astype(jnp.uint8))  # (m,n,W)
-    lit = packed_literals(x)                                     # (B,W)
-    viol = inc[None] & (~lit)[:, None, None]                     # (B,m,n,W)
-    out = ~jnp.any(viol != 0, axis=-1)                           # (B,m,n)
-    return clause_votes(cfg, out.astype(jnp.uint8))
+    return bitpacked_scores_packed(cfg, inc, x)
 
 
 # ---------------------------------------------------------------------------

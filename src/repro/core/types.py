@@ -32,12 +32,26 @@ class TMConfig:
     # Classic TM inference outputs 0 for empty clauses. 1 == paper semantics.
     empty_clause_output: int = 1
     state_dtype: jnp.dtype = jnp.int16
+    # Static engine-cache capacities (jit shapes must not depend on data):
+    #   index_capacity  — per-literal inclusion-list rows (ClauseIndex);
+    #                     None → worst case n_clauses.
+    #   clause_capacity — per-clause included-literal rows ℓ_max
+    #                     (CompactClauses); None → worst case 2o.
+    # Tighter values trade memory/work for an overflow risk surfaced by
+    # ``indexing.validate`` / ``indexing.validate_compact`` (cf. MoE expert
+    # capacity factors).
+    index_capacity: int | None = None
+    clause_capacity: int | None = None
 
     def __post_init__(self):
         if self.n_clauses % 2:
             raise ValueError("n_clauses must be even (half per polarity)")
         if self.empty_clause_output not in (0, 1):
             raise ValueError("empty_clause_output must be 0 or 1")
+        if self.index_capacity is not None and self.index_capacity < 1:
+            raise ValueError("index_capacity must be >= 1")
+        if self.clause_capacity is not None and self.clause_capacity < 1:
+            raise ValueError("clause_capacity must be >= 1")
 
     @property
     def n_literals(self) -> int:
@@ -46,6 +60,15 @@ class TMConfig:
     @property
     def half_clauses(self) -> int:
         return self.n_clauses // 2
+
+    @property
+    def resolved_index_capacity(self) -> int:
+        return self.index_capacity if self.index_capacity is not None else self.n_clauses
+
+    @property
+    def resolved_clause_capacity(self) -> int:
+        return (self.clause_capacity if self.clause_capacity is not None
+                else self.n_literals)
 
 
 class TMState(NamedTuple):

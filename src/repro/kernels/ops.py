@@ -21,14 +21,28 @@ def pack_include(cfg: TMConfig, state: TMState) -> jax.Array:
     return pack_bits(include_mask(cfg, state).astype(jnp.uint8))
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tm_votes_packed(
+    include_packed: jax.Array, x: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """(m, n, W) packed includes + (B, o) inputs → (B, m) votes.
+
+    Cache-taking variant for the engine registry (core/engines.py): the
+    packed include words are maintained incrementally across learning steps,
+    so the kernel wrapper never repacks the full include mask per call.
+    """
+    lit = packed_literals(x)
+    return clause_eval.clause_votes_packed(include_packed, lit,
+                                           interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
 def tm_votes(
     cfg: TMConfig, state: TMState, x: jax.Array, *, interpret: bool = True
 ) -> jax.Array:
     """(B, o) inputs → (B, m) votes via the fused Pallas kernel."""
     inc = pack_include(cfg, state)
-    lit = packed_literals(x)
-    return clause_eval.clause_votes_packed(inc, lit, interpret=interpret)
+    return tm_votes_packed(inc, x, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "interpret"))

@@ -1,0 +1,181 @@
+"""TMBundle pytree semantics, TsetlinMachine estimator, TMDriver shim."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    TMConfig, TMBundle, TsetlinMachine, bundle_scores, init_bundle,
+    registered_engines, train_step, train_step_jit, validate,
+)
+
+CFG = TMConfig(n_classes=2, n_clauses=10, n_features=4, n_states=50,
+               s=3.0, threshold=5)
+ALL_EVENTS = CFG.n_classes * CFG.n_clauses * CFG.n_literals
+
+
+def toy_data(n=256, seed=3):
+    rng = np.random.default_rng(seed)
+    xs = rng.integers(0, 2, (n, CFG.n_features)).astype(np.uint8)
+    ys = xs[:, 0].astype(np.int32)  # separable: class = x_0
+    return jnp.asarray(xs), jnp.asarray(ys)
+
+
+# ---------------------------------------------------------------------------
+# TMBundle pytree
+# ---------------------------------------------------------------------------
+
+def test_bundle_is_pytree_with_static_config():
+    bundle = init_bundle(CFG)
+    leaves, treedef = jax.tree_util.tree_flatten(bundle)
+    assert all(isinstance(l, jax.Array) for l in leaves)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.cfg == CFG  # config rides the treedef, not the leaves
+    assert set(rebuilt.caches) == set(bundle.caches)
+
+
+def test_bundle_survives_tree_map():
+    bundle = init_bundle(CFG)
+    same = jax.tree_util.tree_map(lambda x: x, bundle)
+    assert isinstance(same, TMBundle)
+    np.testing.assert_array_equal(np.asarray(same.state.ta_state),
+                                  np.asarray(bundle.state.ta_state))
+
+
+def test_engine_subset_bundle():
+    bundle = init_bundle(CFG, engines=("dense", "indexed"))
+    # dense is cache-less (needs_cache=False): storing the state under a
+    # second key would alias buffers inside the donated pytree
+    assert set(bundle.caches) == {"indexed"}
+    xs, _ = toy_data(8)
+    # engines without a maintained cache still score (prepared on the fly)
+    got = bundle_scores(bundle, xs, engine="compact")
+    want = bundle_scores(bundle, xs, engine="dense")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# train_step purity / jit
+# ---------------------------------------------------------------------------
+
+def test_train_step_is_pure_and_jits():
+    bundle = init_bundle(CFG)
+    xs, ys = toy_data(16)
+    before = np.asarray(bundle.state.ta_state).copy()
+    # purity via the non-donating eager function (reading the input after a
+    # donating jitted call would crash on accelerator backends — by design)
+    out_eager = train_step(bundle, xs, ys, jax.random.key(0),
+                           max_events=ALL_EVENTS)
+    np.testing.assert_array_equal(before, np.asarray(bundle.state.ta_state))
+    assert (np.asarray(out_eager.state.ta_state) != before).any()
+    # jitted path: advances state and keeps the index valid
+    out = train_step_jit(init_bundle(CFG), xs, ys, jax.random.key(0),
+                         max_events=ALL_EVENTS)
+    assert (np.asarray(out.state.ta_state) != before).any()
+    for name, ok in validate(CFG, out.state, out.index).items():
+        assert bool(ok), name
+
+
+def test_train_step_jit_and_eager_agree():
+    bundle = init_bundle(CFG)
+    xs, ys = toy_data(8, seed=9)
+    key = jax.random.key(7)
+    eager = train_step(bundle, xs, ys, key, max_events=ALL_EVENTS)
+    jitted = train_step_jit(bundle, xs, ys, key, max_events=ALL_EVENTS)
+    np.testing.assert_array_equal(np.asarray(eager.state.ta_state),
+                                  np.asarray(jitted.state.ta_state))
+    np.testing.assert_array_equal(np.asarray(eager.index.counts),
+                                  np.asarray(jitted.index.counts))
+
+
+# ---------------------------------------------------------------------------
+# TsetlinMachine estimator
+# ---------------------------------------------------------------------------
+
+def test_estimator_learns_separable_toy():
+    xs, ys = toy_data()
+    machine = TsetlinMachine(CFG, seed=42).init()
+    machine.fit(xs, ys, epochs=3)
+    acc = machine.evaluate(xs, ys, engine="indexed")
+    assert acc > 0.95, f"estimator failed separable toy: acc={acc}"
+    # all engines agree on the trained machine's predictions
+    want = np.asarray(machine.predict(xs, engine="dense"))
+    for name in registered_engines():
+        got = np.asarray(machine.predict(xs, engine=name))
+        np.testing.assert_array_equal(got, want, err_msg=name)
+
+
+def test_estimator_minibatch_fit_and_seeded_reproducibility():
+    xs, ys = toy_data(64)
+    a = TsetlinMachine(CFG, seed=5).init().fit(xs, ys, epochs=2, batch_size=16)
+    b = TsetlinMachine(CFG, seed=5).init().fit(xs, ys, epochs=2, batch_size=16)
+    np.testing.assert_array_equal(np.asarray(a.state.ta_state),
+                                  np.asarray(b.state.ta_state))
+
+
+def test_estimator_checkpoint_roundtrip():
+    xs, ys = toy_data(32)
+    machine = TsetlinMachine(CFG, seed=1).init().fit(xs, ys)
+    tree = machine.as_pytree()
+    restored = TsetlinMachine(CFG).load_pytree(
+        jax.tree_util.tree_map(jnp.asarray, tree))
+    np.testing.assert_array_equal(
+        np.asarray(restored.predict(xs, engine="indexed")),
+        np.asarray(machine.predict(xs, engine="indexed")))
+    for name, ok in validate(CFG, restored.state, restored.index).items():
+        assert bool(ok), name
+
+
+def test_estimator_respects_capacity_config():
+    cfg = dataclasses.replace(CFG, index_capacity=6, clause_capacity=5)
+    bundle = init_bundle(cfg)
+    assert bundle.index.capacity == 6
+    assert bundle.caches["compact"].lit_idx.shape[-1] == 5
+
+
+# ---------------------------------------------------------------------------
+# TMDriver deprecated shim
+# ---------------------------------------------------------------------------
+
+def test_driver_shim_deprecation_and_parity():
+    from repro.core.driver import TMDriver
+    with pytest.warns(DeprecationWarning):
+        driver = TMDriver.create(CFG)
+    xs, ys = toy_data(32)
+    driver.train_batch(xs, ys, jax.random.key(0))
+    for name, ok in validate(CFG, driver.state, driver.index).items():
+        assert bool(ok), name
+    want = np.asarray(driver.scores(xs, engine="dense"))
+    for name in registered_engines():
+        np.testing.assert_array_equal(
+            np.asarray(driver.scores(xs, engine=name)), want, err_msg=name)
+    # legacy persistence schema intact
+    tree = driver.as_pytree()
+    assert set(tree) == {"ta_state", "lists", "counts", "pos"}
+    with pytest.warns(DeprecationWarning):
+        restored = TMDriver.create(CFG).load_pytree(tree)
+    np.testing.assert_array_equal(
+        np.asarray(restored.predict(xs, engine="indexed")),
+        np.asarray(driver.predict(xs, engine="indexed")))
+
+
+def test_driver_shim_sync_index_false_keeps_other_engines_fresh():
+    """Legacy semantics: sync_index=False leaves only the *index* stale;
+    bitpack/compact/dense always evaluate off the current state."""
+    import warnings
+    from repro.core.driver import TMDriver
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        driver = TMDriver.create(CFG)
+    xs, ys = toy_data(32)
+    driver.train_batch(xs, ys, jax.random.key(3), sync_index=False)
+    want = np.asarray(driver.scores(xs, engine="dense"))
+    for name in ("bitpack", "bitpack_xla", "compact"):
+        np.testing.assert_array_equal(
+            np.asarray(driver.scores(xs, engine=name)), want, err_msg=name)
+    # the index is stale by request; rebuild restores parity
+    driver.rebuild_index()
+    np.testing.assert_array_equal(
+        np.asarray(driver.scores(xs, engine="indexed")), want)

@@ -1,6 +1,9 @@
 """Property-based kernel tests (hypothesis): random shapes/densities/inputs."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bitpack import pack_bits, packed_literals

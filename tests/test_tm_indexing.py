@@ -3,13 +3,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property test uses hypothesis when present; seeded fallback otherwise
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (
-    TMConfig, TMState, apply_events, build_index, compact, compact_eval,
-    compact_scores, delete, dense_clause_outputs, empty_index,
-    events_from_transition, indexed_scores, indexed_work, insert, init_tm,
-    scores, validate,
+    TMConfig, TMState, apply_events, build_index, compact,
+    compact_apply_events, compact_eval, compact_scores, delete,
+    dense_clause_outputs, empty_index, events_from_transition,
+    indexed_scores, indexed_work, insert, init_tm, scores, validate,
 )
 from repro.core import ref
 from repro.core.indexing import Event
@@ -66,13 +71,8 @@ def test_insert_then_delete_roundtrip():
     assert int(idx.pos[1, 5, 3]) == -1
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, CFG.n_classes - 1),
-                          st.integers(0, CFG.n_clauses - 1),
-                          st.integers(0, CFG.n_literals - 1)),
-                min_size=1, max_size=40))
-def test_event_replay_equals_rebuild(ops):
-    """Property: replaying any insert/delete sequence ≡ batch rebuild."""
+def _check_event_replay_equals_rebuild(ops):
+    """Property body: replaying any insert/delete sequence ≡ batch rebuild."""
     inc = np.zeros((CFG.n_classes, CFG.n_clauses, CFG.n_literals), bool)
     idx = empty_index(CFG, CAP)
     for (i, j, k) in ops:
@@ -91,6 +91,26 @@ def test_event_replay_equals_rebuild(ops):
     # index is a set structure; validate() checks the bijection)
     fresh = build_index(CFG, state, CAP)
     np.testing.assert_array_equal(np.asarray(idx.counts), np.asarray(fresh.counts))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, CFG.n_classes - 1),
+                              st.integers(0, CFG.n_clauses - 1),
+                              st.integers(0, CFG.n_literals - 1)),
+                    min_size=1, max_size=40))
+    def test_event_replay_equals_rebuild(ops):
+        _check_event_replay_equals_rebuild(ops)
+else:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_event_replay_equals_rebuild(seed):
+        rng = np.random.default_rng(seed)
+        n_ops = int(rng.integers(1, 41))
+        ops = [(int(rng.integers(0, CFG.n_classes)),
+                int(rng.integers(0, CFG.n_clauses)),
+                int(rng.integers(0, CFG.n_literals)))
+               for _ in range(n_ops)]
+        _check_event_replay_equals_rebuild(ops)
 
 
 def test_apply_events_masked_buffer():
@@ -148,6 +168,72 @@ def test_compact_eval_equals_dense(seed):
     np.testing.assert_array_equal(
         np.asarray(compact_scores(CFG, comp, xs)),
         np.asarray(scores(CFG, state, xs)))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_compact_apply_events_equals_rebuild(seed):
+    """Event replay on the clause-compact layout ≡ fresh compact() build.
+
+    Rows are sets (compact_eval is order-blind), so equality is on lengths
+    and per-row membership, not slot order."""
+    state0 = random_state(CFG, seed)
+    state1 = random_state(CFG, 100 + seed)
+    old_inc = include_mask(CFG, state0)
+    new_inc = include_mask(CFG, state1)
+    l_max = CFG.n_literals  # worst-case capacity
+    comp = compact(CFG, state0, l_max)
+    n_changed = int(np.asarray(old_inc != new_inc).sum())
+    events = events_from_transition(old_inc, new_inc, n_changed + 4)
+    got = compact_apply_events(comp, events)
+    want = compact(CFG, state1, l_max)
+    np.testing.assert_array_equal(np.asarray(got.lengths),
+                                  np.asarray(want.lengths))
+    got_rows = np.sort(np.asarray(got.lit_idx), axis=-1)
+    want_rows = np.sort(np.asarray(want.lit_idx), axis=-1)
+    np.testing.assert_array_equal(got_rows, want_rows)
+
+
+def test_compact_apply_events_overflow_is_contained():
+    """Capacity overflow loses literals (config error) but never corrupts
+    surviving entries: inserts past ℓ_max clamp, deletes of never-absorbed
+    literals are no-ops, and validate_compact flags the loss."""
+    from repro.core import validate_compact
+    from repro.core.indexing import Event
+    l_max = 2
+    state0 = TMState(ta_state=jnp.full(
+        (CFG.n_classes, CFG.n_clauses, CFG.n_literals), CFG.n_states,
+        jnp.int16))
+    comp = compact(CFG, state0, l_max)
+    # insert 3 literals into clause (0, 0): third overflows
+    ev = Event(cls=jnp.zeros(3, jnp.int32),
+               clause=jnp.zeros(3, jnp.int32),
+               literal=jnp.arange(3, dtype=jnp.int32),
+               is_insert=jnp.ones(3, bool), valid=jnp.ones(3, bool))
+    comp = compact_apply_events(comp, ev)
+    assert int(comp.lengths[0, 0]) == l_max  # clamped, not 3
+    # deleting the dropped literal 2 must not disturb survivors {0, 1}
+    ev_del = Event(cls=jnp.zeros(1, jnp.int32), clause=jnp.zeros(1, jnp.int32),
+                   literal=jnp.full(1, 2, jnp.int32),
+                   is_insert=jnp.zeros(1, bool), valid=jnp.ones(1, bool))
+    comp = compact_apply_events(comp, ev_del)
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(comp.lit_idx[0, 0])), [0, 1])
+    # validate_compact surfaces the loss vs the true include mask
+    ta = np.full((CFG.n_classes, CFG.n_clauses, CFG.n_literals),
+                 CFG.n_states, np.int16)
+    ta[0, 0, :3] = CFG.n_states + 1  # literals 0,1,2 included, 2 after delete
+    ta[0, 0, 2] = CFG.n_states      # literal 2 deleted again
+    checks = validate_compact(
+        CFG, TMState(ta_state=jnp.asarray(ta)), comp)
+    assert bool(checks["overflow_ok"]) and bool(checks["member_ok"])
+
+
+def test_validate_compact_on_fresh_build():
+    from repro.core import validate_compact
+    state = random_state(CFG, 3)
+    comp = compact(CFG, state, CFG.n_literals)
+    for name, ok in validate_compact(CFG, state, comp).items():
+        assert bool(ok), name
 
 
 def test_indexed_work_metric():
