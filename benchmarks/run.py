@@ -70,6 +70,18 @@ def main() -> None:
         print(f"tm/paper_scale/{exp.name}/analytic_work_ratio,,"
               f"{ratio:.5f}")
 
+    # --- TM serving tail latency (batched inference path) -----------------
+    from repro.core.types import TMConfig
+    from repro.launch import tm_serve
+    serve_rec = tm_serve.run(
+        TMConfig(n_classes=10, n_clauses=256, n_features=196),
+        engines=("indexed", "bitpack_xla", "compact"),
+        n_requests=256 if not args.full else 2048, rps=1000.0)
+    for eng, r in serve_rec["engines"].items():
+        lm_ = r["latency_ms"]
+        print(f"tm/serve/{eng}/p95,{lm_['p95'] * 1e3:.2f},"
+              f"p99_ms={lm_['p99']} thru_rps={r['throughput_rps']}")
+
     # --- LM zoo step wall-times -------------------------------------------
     if not args.skip_lm:
         from benchmarks import lm_step

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # CI smoke: tier-1 tests + the quickstart example on the estimator API +
-# one scaled-down benchmark cell. Run from anywhere:
+# one scaled-down benchmark cell + the TM serving smoke. Run from anywhere:
 #
 #     bash scripts/ci.sh
 #
@@ -8,19 +8,41 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== hygiene: no compiled artifacts tracked =="
+if git ls-files | grep -q '\.pyc$'; then
+  echo "ERROR: *.pyc files are git-tracked:" >&2
+  git ls-files | grep '\.pyc$' >&2
+  exit 1
+fi
+
 echo "== tier-1 tests =="
-# Deselected: failures that pre-date the engine-registry work (tracked as
-# ROADMAP.md open items) — mixtral prefill/decode mismatch, and the sharding
-# subprocess test which needs jax.sharding.AxisType (absent in the
-# container's jax 0.4.37). Kept out so the smoke gate stays meaningful.
+# Deselected: pre-existing-at-seed mixtral prefill/decode mismatch (tracked
+# as a ROADMAP.md open item). The sharding subprocess test is back in (the
+# jax-compat shims in launch/mesh.py + sharding.py fixed it on jax 0.4.37),
+# and the TM sharded-parity subprocess test rides with it — the two `slow`
+# tests put this gate at ~20 min on the 1-core container; use
+# `pytest -m "not slow"` for a fast local loop (pytest.ini).
 python -m pytest -x -q \
-  --deselect "tests/test_models_smoke.py::test_prefill_decode_consistency[mixtral-8x7b]" \
-  --deselect "tests/test_sharding.py::test_sharded_equivalence_subprocess"
+  --deselect "tests/test_models_smoke.py::test_prefill_decode_consistency[mixtral-8x7b]"
 
 echo "== quickstart (TsetlinMachine estimator API) =="
 python examples/quickstart.py
 
 echo "== benchmark smoke cell =="
 python -m benchmarks.run --smoke
+
+echo "== tm_serve smoke (batched TM serving) =="
+rm -f BENCH_tm_serve.json
+python -m repro.launch.tm_serve --smoke
+python - <<'EOF'
+import json
+d = json.load(open("BENCH_tm_serve.json"))
+assert d["engines"], "no engine records in BENCH_tm_serve.json"
+for name, r in d["engines"].items():
+    lat = r["latency_ms"]
+    assert {"p50", "p90", "p95", "p99"} <= set(lat), (name, lat)
+    assert r["throughput_rps"] > 0, (name, r)
+print("BENCH_tm_serve.json well-formed:", ", ".join(d["engines"]))
+EOF
 
 echo "CI smoke: OK"

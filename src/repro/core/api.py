@@ -54,9 +54,17 @@ class TMBundle:
         return self.caches["indexed"]
 
 
-def _cache_keys(engine_names: Iterable[str]) -> tuple[str, ...]:
+def cache_keys_for(engine_names: Iterable[str] | None = None) -> tuple[str, ...]:
+    """Distinct cache slots the named engines need (``None`` → all registered).
+
+    Cache-less engines (``needs_cache=False``) read ``bundle.state`` directly
+    and contribute no slot. Public because the sharded layer
+    (``core/distributed.py``) builds shard-local caches for the same slots.
+    """
+    names = (tuple(engine_names) if engine_names is not None
+             else registered_engines())
     keys: dict[str, None] = {}
-    for name in engine_names:
+    for name in names:
         eng = get_engine(name)
         if eng.needs_cache:  # cache-less engines read bundle.state directly
             keys.setdefault(eng.cache_key, None)
@@ -78,7 +86,7 @@ def init_bundle(
     names = tuple(engines) if engines is not None else registered_engines()
     state = state if state is not None else init_tm(cfg, rng)
     caches = {key: cache_provider(key).prepare(cfg, state)
-              for key in _cache_keys(names)}
+              for key in cache_keys_for(names)}
     return TMBundle(cfg=cfg, state=state, caches=caches)
 
 
@@ -281,6 +289,6 @@ class TsetlinMachine:
             lists=tree["lists"], counts=tree["counts"], pos=tree["pos"])
         caches = {key: (restored if key == "indexed"
                         else cache_provider(key).prepare(self.cfg, state))
-                  for key in _cache_keys(self.engines)}
+                  for key in cache_keys_for(self.engines)}
         self.bundle = TMBundle(cfg=self.cfg, state=state, caches=caches)
         return self

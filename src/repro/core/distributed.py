@@ -1,62 +1,248 @@
-"""TM at datacenter scale (beyond-paper): clause-sharded evaluation.
+"""Clause-sharded TMBundle execution — TM at datacenter scale (beyond-paper).
 
-The paper targets one CPU. The TM's vote structure is embarrassingly
-shardable: clauses over ``model`` (each shard owns n/16 clauses of every
-class), batch over ``data``/``pod``. Votes are partial sums reduced over
-``model`` — GSPMD inserts one (B, m)-sized all-reduce, the only collective.
+The paper targets one CPU. The Massively Parallel TM line (Abeyrathna et
+al., 2020) shows the scaling recipe: partition *clauses* across workers,
+evaluate shard-locally, reduce the per-class vote once. This module is that
+recipe over the PR-1 engine registry, so the sharded unit is the whole
+``TMBundle`` — TA state *and* every engine cache — not a bare ``ta_state``:
 
-Learning shards the same way: Type I/II feedback is per-clause-local given
-the per-class vote (the one all-reduce), so TA-state updates never move.
-The dry-run lowers this on the production meshes (launch/dryrun.py --tm).
+  * every ``EvalEngine`` declares how its cache partitions over the mesh
+    clause axis (``cache_pspec``), builds its shard-local cache from a
+    clause shard of the state (``shard_prepare``), and evaluates partial
+    votes (``partial_scores``);
+  * ``make_sharded_scores`` psums the partials over ``CLAUSE_AXIS`` — the
+    single (B, m) vote all-reduce, the *only* collective in the lowered HLO
+    (asserted by ``launch/dryrun.py --tm``); batch shards over the data/pod
+    axes with no communication at all;
+  * ``make_sharded_train_step`` runs dense Type I/II feedback on each
+    shard's clause slice (feedback is clause-local given the vote — the
+    vote psum inside ``tm._class_round`` is again the only collective),
+    then diffs the *local* include mask and replays the events into the
+    shard-local caches: event-driven cache sync never leaves the shard.
+
+Randomness: every shard draws the identical full-size uniforms and slices
+its clause rows (``tm._slice_rands``), so sharded training is **bit-exact**
+with the single-device path — the property tests/test_tm_sharded.py pins
+for every registered engine on a forced 8-device host mesh.
+
+Shard-local cache layouts: caches whose arrays carry the clause axis
+(packed words, compact rows, the position matrix) tile into the global
+array exactly; per-shard structures with no clause axis of their own (the
+index's lists capacity rows and counts) tile as opaque blocks along
+``CLAUSE_AXIS`` — the assembled global array is storage, only ever
+interpreted through shard_map with the engine's declared spec. The indexed
+engine's shard therefore owns complete falsification lists over *its own*
+clauses (local ids), which is what makes the falsified-union shard-local
+and the partial votes additive.
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import tm
-from repro.core.types import TMConfig
+from repro.core import indexing, tm
+from repro.core.api import DEFAULT_ENGINE, TMBundle, cache_keys_for
+from repro.core.engines import (
+    CLAUSE_AXIS, cache_provider, get_engine, registered_engines)
+from repro.core.types import TMConfig, TMState, clause_polarity, include_mask
+from repro.sharding import shard_map_compat
+
+STATE_PSPEC = TMState(ta_state=P(None, CLAUSE_AXIS, None))
 
 
-def tm_shardings(cfg: TMConfig, mesh):
-    """(state_sharding, batch_sharding, votes_sharding)."""
-    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-    state = NamedSharding(mesh, P(None, "model", None))   # (m, n, 2o)
-    x = NamedSharding(mesh, P(baxes, None))               # (B, o)
-    y = NamedSharding(mesh, P(baxes))
-    votes = NamedSharding(mesh, P(baxes, None))           # (B, m)
-    return state, x, y, votes
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes the batch shards over (pod-major, matching P ordering)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
-def make_sharded_votes(cfg: TMConfig, mesh):
-    """jit'd (ta_state, x) → (B, m) votes on the production mesh."""
-    state_sh, x_sh, _, votes_sh = tm_shardings(cfg, mesh)
-
-    def fn(ta_state, x):
-        from repro.core.types import TMState
-        return tm.scores(cfg, TMState(ta_state=ta_state), x)
-
-    return jax.jit(fn, in_shardings=(state_sh, x_sh),
-                   out_shardings=votes_sh)
+def clause_shards(mesh) -> int:
+    if CLAUSE_AXIS not in mesh.axis_names:
+        raise ValueError(
+            f"mesh {mesh.axis_names} has no {CLAUSE_AXIS!r} axis to shard "
+            "clauses over")
+    return mesh.shape[CLAUSE_AXIS]
 
 
-def make_sharded_update(cfg: TMConfig, mesh):
-    """jit'd batch-parallel TM update, clause-sharded.
+def _check_mesh(cfg: TMConfig, mesh) -> int:
+    shards = clause_shards(mesh)
+    if cfg.n_clauses % shards:
+        raise ValueError(
+            f"n_clauses={cfg.n_clauses} must divide by the {shards}-way "
+            f"{CLAUSE_AXIS!r} axis")
+    return shards
 
-    Uses the batch-parallel learning variant (DESIGN.md §2): per-sample
-    deltas against the pre-batch state, summed — the approximation that
-    makes TM learning batch-shardable at all.
+
+def bundle_pspecs(cfg: TMConfig, engines=None):
+    """(state_pspec, {cache_key: cache_pspec}) for a sharded bundle."""
+    return STATE_PSPEC, {key: cache_provider(key).cache_pspec(cfg)
+                         for key in cache_keys_for(engines)}
+
+
+def _sharded_polarity(cfg: TMConfig, mesh) -> jax.Array:
+    return jax.device_put(clause_polarity(cfg),
+                          NamedSharding(mesh, P(CLAUSE_AXIS)))
+
+
+def make_sharded_prepare(cfg: TMConfig, mesh, *, engines=None):
+    """``(TMState) -> TMBundle`` with shard-local caches for every engine.
+
+    The state lands clause-sharded (``STATE_PSPEC``); each distinct cache
+    slot is built *on its shard* from the local state slice — no device ever
+    materialises a full cache.
     """
-    state_sh, x_sh, y_sh, _ = tm_shardings(cfg, mesh)
+    shards = _check_mesh(cfg, mesh)
+    keys = cache_keys_for(engines)
+    state_sh = NamedSharding(mesh, STATE_PSPEC.ta_state)
+    _, cache_specs = bundle_pspecs(cfg, engines)
 
-    def fn(ta_state, xs, ys, seed):
-        from repro.core.types import TMState
-        st = TMState(ta_state=ta_state)
-        new = tm.update_batch_parallel(cfg, st, xs, ys,
-                                       jax.random.key(seed[0]))
-        return new.ta_state
+    def local_fn(state_l: TMState):
+        return {k: cache_provider(k).shard_prepare(cfg, state_l, shards)
+                for k in keys}
 
-    seed_sh = NamedSharding(mesh, P(None))
-    return jax.jit(fn, in_shardings=(state_sh, x_sh, y_sh, seed_sh),
-                   out_shardings=state_sh, donate_argnums=(0,))
+    fn = jax.jit(shard_map_compat(local_fn, mesh=mesh,
+                                  in_specs=(STATE_PSPEC,),
+                                  out_specs=cache_specs))
+
+    def prepare(state: TMState) -> TMBundle:
+        state = TMState(ta_state=jax.device_put(state.ta_state, state_sh))
+        caches = fn(state) if keys else {}
+        return TMBundle(cfg=cfg, state=state, caches=caches)
+
+    return prepare
+
+
+def make_sharded_scores(cfg: TMConfig, mesh, *, engine: str = DEFAULT_ENGINE):
+    """``(TMBundle, x) -> (B, m)`` scores through one engine, clause-sharded.
+
+    Exactly one collective: the psum of per-shard partial votes (GSPMD
+    lowers it to a single (B, m) all-reduce over ``CLAUSE_AXIS``). The batch
+    shards over the data/pod axes communication-free.
+    """
+    _check_mesh(cfg, mesh)
+    eng = get_engine(engine)
+    baxes = batch_axes(mesh)
+    bspec = P(baxes, None) if baxes else P(None, None)
+    cache_spec = eng.cache_pspec(cfg)
+    pol = _sharded_polarity(cfg, mesh)
+
+    def local_fn(cache_l, pol_l, x_l):
+        part = eng.partial_scores(cfg, cache_l, x_l, pol_l)
+        return jax.lax.psum(part, CLAUSE_AXIS)
+
+    fn = jax.jit(shard_map_compat(
+        local_fn, mesh=mesh, in_specs=(cache_spec, P(CLAUSE_AXIS), bspec),
+        out_specs=bspec))
+
+    def scores(bundle: TMBundle, x: jax.Array) -> jax.Array:
+        if not eng.needs_cache:
+            return fn(bundle.state, pol, x)
+        cache = bundle.caches.get(eng.cache_key)
+        if cache is None:
+            raise KeyError(
+                f"engine {engine!r} (cache slot {eng.cache_key!r}) was not "
+                f"prepared in this bundle (slots: {tuple(bundle.caches)}); "
+                "include it in the engines= of make_sharded_prepare/"
+                "ShardedTM — sharded caches cannot be built on the fly")
+        return fn(cache, pol, x)
+
+    # exposed for the dry-run's HLO assertions (launch/dryrun.py --tm)
+    scores.jitted, scores.pol, scores.engine = fn, pol, eng
+    return scores
+
+
+def make_sharded_train_step(cfg: TMConfig, mesh, *, engines=None,
+                            parallel: bool = False, max_events: int = 4096):
+    """``(TMBundle, xs, ys, rng) -> TMBundle``, clause-sharded end to end.
+
+    Sequential mode scans the full batch on every shard (online learning is
+    sequential in samples by definition); the batch-parallel approximation
+    additionally shards the batch over the data/pod axes, psumming the
+    summed TA deltas. Either way the per-class vote psum inside
+    ``tm._class_round`` is the only cross-shard traffic — the include-mask
+    diff and every cache's event replay stay on the shard (``max_events``
+    bounds the *per-shard* event buffer). Bit-exact with the single-device
+    ``api.train_step`` (identical randomness via full-draw slicing).
+    """
+    shards = _check_mesh(cfg, mesh)
+    n_local = cfg.n_clauses // shards
+    keys = cache_keys_for(engines)
+    _, cache_specs = bundle_pspecs(cfg, engines)
+    baxes = batch_axes(mesh) if parallel else ()
+    x_spec = P(baxes, None) if baxes else P(None, None)
+    y_spec = P(baxes) if baxes else P(None)
+    pol = _sharded_polarity(cfg, mesh)
+
+    def local_fn(state_l: TMState, caches_l, pol_l, xs, ys, key_data):
+        rng = jax.random.wrap_key_data(key_data)
+        start = jax.lax.axis_index(CLAUSE_AXIS) * n_local
+        old_inc = include_mask(cfg, state_l)
+        if parallel:
+            b_idx = jnp.int32(0)
+            for a in baxes:
+                b_idx = b_idx * mesh.shape[a] + jax.lax.axis_index(a)
+            b_total = (xs.shape[0] * math.prod(mesh.shape[a] for a in baxes)
+                       if baxes else None)
+            new_state = tm.update_batch_parallel(
+                cfg, state_l, xs, ys, rng, pol=pol_l, axis_name=CLAUSE_AXIS,
+                clause_start=start, batch_axes=baxes,
+                batch_start=b_idx * xs.shape[0], batch_total=b_total)
+        else:
+            new_state = tm.update_batch_sequential(
+                cfg, state_l, xs, ys, rng, pol=pol_l, axis_name=CLAUSE_AXIS,
+                clause_start=start)
+        events = indexing.events_from_transition(
+            old_inc, include_mask(cfg, new_state), max_events)
+        new_caches = {k: cache_provider(k).update_cache(
+                          cfg, caches_l[k], new_state, events) for k in keys}
+        return new_state, new_caches
+
+    sm = shard_map_compat(
+        local_fn, mesh=mesh,
+        in_specs=(STATE_PSPEC, cache_specs, P(CLAUSE_AXIS), x_spec, y_spec,
+                  P(None)),
+        out_specs=(STATE_PSPEC, cache_specs))
+    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    fn = jax.jit(sm, donate_argnums=donate)
+
+    def step(bundle: TMBundle, xs, ys, rng) -> TMBundle:
+        new_state, new_caches = fn(bundle.state, bundle.caches, pol, xs, ys,
+                                   jax.random.key_data(rng))
+        return TMBundle(cfg=cfg, state=new_state, caches=new_caches)
+
+    # exposed for the dry-run's HLO assertions (launch/dryrun.py --tm)
+    step.jitted, step.pol = fn, pol
+    return step
+
+
+class ShardedTM:
+    """One (cfg, mesh) worth of sharded prepare / scores / train_step.
+
+    The distributed counterpart of the ``TsetlinMachine`` facade: factories
+    are built once (compilation caches per engine), the bundle flows through
+    pure functions exactly like the single-device API.
+    """
+
+    def __init__(self, cfg: TMConfig, mesh, *, engines=None,
+                 parallel: bool = False, max_events: int = 4096):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.engines = (tuple(engines) if engines is not None
+                        else registered_engines())
+        self.prepare = make_sharded_prepare(cfg, mesh, engines=self.engines)
+        self.train_step = make_sharded_train_step(
+            cfg, mesh, engines=self.engines, parallel=parallel,
+            max_events=max_events)
+        self._scores: dict[str, object] = {}
+
+    def scores(self, bundle: TMBundle, x, *, engine: str = DEFAULT_ENGINE):
+        fn = self._scores.get(engine)
+        if fn is None:
+            fn = make_sharded_scores(self.cfg, self.mesh, engine=engine)
+            self._scores[engine] = fn
+        return fn(bundle, x)
+
+    def predict(self, bundle: TMBundle, x, *, engine: str = DEFAULT_ENGINE):
+        return jnp.argmax(self.scores(bundle, x, engine=engine), axis=-1)

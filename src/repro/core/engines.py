@@ -37,12 +37,17 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core import indexing, tm
 from repro.core.bitpack import WORD, pack_bits
 from repro.core.indexing import Event
 from repro.core.types import TMConfig, TMState, include_mask
 from repro.kernels import ops as kops
+
+# Mesh axis name the clause dimension shards over (production meshes call
+# their tensor axis "model"; clauses are the TM's model dimension).
+CLAUSE_AXIS = "model"
 
 
 class EvalEngine:
@@ -57,6 +62,14 @@ class EvalEngine:
                       (storing one would alias ``state``'s buffers inside the
                       same pytree, which breaks donation — a donated bundle
                       must not donate one buffer through two leaves).
+
+    Shard contract (core/distributed.py): an engine that supports clause
+    sharding declares ``cache_pspec`` (how its cache pytree partitions over
+    ``CLAUSE_AXIS``), builds its shard-local cache from a clause shard of the
+    state via ``shard_prepare``, and evaluates partial votes via
+    ``partial_scores``. ``update_cache`` is *already* shard-local: Type I/II
+    feedback is clause-local given the vote, so each shard replays only its
+    own events against its own cache — no extra methods needed for learning.
     """
 
     name: str = ""
@@ -82,6 +95,43 @@ class EvalEngine:
         """
         del events
         return self.prepare(cfg, state)
+
+    # -- shard contract (DESIGN.md §6) --------------------------------------
+
+    def cache_pspec(self, cfg: TMConfig):
+        """PartitionSpec pytree (same structure as the cache) placing the
+        clause axis on ``CLAUSE_AXIS``. Axes whose *values* are shard-local
+        (list slots, per-shard counts) tile over ``CLAUSE_AXIS`` as opaque
+        blocks — the assembled global array is storage, interpreted only
+        through shard_map with this same spec."""
+        raise NotImplementedError(
+            f"engine {self.name!r} does not declare a cache PartitionSpec; "
+            "implement cache_pspec/shard_prepare/partial_scores to make it "
+            "clause-shardable (DESIGN.md §6)")
+
+    def shard_prepare(self, cfg: TMConfig, state: TMState, n_shards: int):
+        """Shard-local cache from a clause shard of the state. Default:
+        ``prepare`` — correct whenever cache shapes carry the clause axis
+        directly (the indexed engine overrides to split list capacity)."""
+        del n_shards
+        return self.prepare(cfg, state)
+
+    def partial_scores(self, cfg: TMConfig, cache, x: jax.Array,
+                       pol: jax.Array) -> jax.Array:
+        """(B, m) partial vote sums over this shard's clauses.
+
+        ``pol`` is the shard's ±1 polarity slice; partials must *add* across
+        shards — one psum over ``CLAUSE_AXIS`` yields the engine's global
+        scores (the single (B, m) vote all-reduce).
+        """
+        raise NotImplementedError(
+            f"engine {self.name!r} does not implement partial_scores")
+
+
+def _partial_votes(clause_out: jax.Array, pol: jax.Array) -> jax.Array:
+    """(B, m, n_local) clause outputs × (n_local,) ±1 polarity → (B, m)."""
+    return jnp.einsum("bmn,n->bm", clause_out.astype(jnp.int32),
+                      pol.astype(jnp.int32))
 
 
 _REGISTRY: dict[str, EvalEngine] = {}
@@ -142,6 +192,13 @@ class DenseEngine(EvalEngine):
         del events
         return state  # zero-copy: the new state is the new cache
 
+    def cache_pspec(self, cfg):
+        # the "cache" is the TA state itself: (m, n, 2o) over clauses
+        return TMState(ta_state=P(None, CLAUSE_AXIS, None))
+
+    def partial_scores(self, cfg, cache, x, pol):
+        return _partial_votes(tm.dense_clause_outputs(cfg, cache, x), pol)
+
 
 # ---------------------------------------------------------------------------
 # bitpack / bitpack_xla — 32×-packed include words (shared cache)
@@ -173,6 +230,16 @@ class _PackedEngineBase(EvalEngine):
     def update_cache(self, cfg, cache, state, events):
         del state
         return packed_include_apply_events(cache, events)
+
+    def cache_pspec(self, cfg):
+        return P(None, CLAUSE_AXIS, None)                     # (m, n, W)
+
+    def partial_scores(self, cfg, cache, x, pol):
+        # XLA body as the shard-local evaluator for *both* packed engines:
+        # a Pallas call needs an explicit partitioning rule to live under
+        # shard_map; the packed layout is identical, so on TPU the kernel
+        # slots in here once its sharding rule is registered (DESIGN.md §6).
+        return _partial_votes(tm.packed_clause_outputs(cache, x), pol)
 
 
 class BitpackEngine(_PackedEngineBase):
@@ -218,6 +285,14 @@ class CompactEngine(EvalEngine):
         del state
         return indexing.compact_apply_events(cache, events)
 
+    def cache_pspec(self, cfg):
+        return indexing.CompactClauses(
+            lit_idx=P(None, CLAUSE_AXIS, None),               # (m, n, ℓ_max)
+            lengths=P(None, CLAUSE_AXIS))                     # (m, n)
+
+    def partial_scores(self, cfg, cache, x, pol):
+        return _partial_votes(indexing.compact_eval(cfg, cache, x), pol)
+
 
 # ---------------------------------------------------------------------------
 # indexed — the paper's falsification index (Eq. 4)
@@ -238,6 +313,23 @@ class IndexedEngine(EvalEngine):
     def update_cache(self, cfg, cache, state, events):
         del state
         return indexing.apply_events(cache, events)
+
+    def cache_pspec(self, cfg):
+        # Per-shard falsification lists: each shard owns complete lists over
+        # *its own* clauses (local ids), so the falsified-union is shard-local
+        # and partial counts add. lists tile capacity rows, counts tile their
+        # per-shard (m, 2o) blocks — opaque storage outside shard_map.
+        return indexing.ClauseIndex(
+            lists=P(None, None, CLAUSE_AXIS),                 # (m, 2o, cap)
+            counts=P(None, CLAUSE_AXIS),                      # (m, S·2o)
+            pos=P(None, CLAUSE_AXIS, None))                   # (m, n, 2o)
+
+    def shard_prepare(self, cfg, state, n_shards):
+        cap = indexing.shard_capacity(cfg.resolved_index_capacity, n_shards)
+        return indexing.build_index(cfg, state, cap)
+
+    def partial_scores(self, cfg, cache, x, pol):
+        return indexing.indexed_partial_scores(cache, x, pol)
 
 
 register_engine(DenseEngine())

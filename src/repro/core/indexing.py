@@ -44,6 +44,20 @@ class ClauseIndex(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
+def shard_capacity(capacity: int, n_shards: int) -> int:
+    """Per-shard list capacity for a clause-sharded index.
+
+    Capacity rows split with the clauses they hold (worst case per shard is
+    its clause count, and the default capacity *is* ``n_clauses``), so the
+    global ``(m, 2o, capacity)`` lists tensor tiles exactly over shards.
+    """
+    if capacity % n_shards:
+        raise ValueError(
+            f"index capacity {capacity} must divide by {n_shards} clause "
+            "shards (set TMConfig.index_capacity to a multiple)")
+    return capacity // n_shards
+
+
 def empty_index(cfg: TMConfig, capacity: int) -> ClauseIndex:
     """All TAs exclude ⇒ all lists empty (paper: 'rather straightforward')."""
     m, n, L = cfg.n_classes, cfg.n_clauses, cfg.n_literals
@@ -207,19 +221,23 @@ def events_from_transition(
 # ---------------------------------------------------------------------------
 
 
-def indexed_scores(cfg: TMConfig, index: ClauseIndex, x: jax.Array) -> jax.Array:
-    """(B, o) inputs → (B, m) scores via falsification look-up.
+def indexed_partial_scores(
+    index: ClauseIndex, x: jax.Array, pol: jax.Array
+) -> jax.Array:
+    """(B, o) inputs + per-clause ±1 polarity → (B, m) partial vote sums.
 
-    For each false literal k, the clauses in L[i,k] are falsified. Scores are
-    |C_F^-| - |C_F^+| (Eq. 4), which equals the vote sum of Eq. 3 shifted by
-    a per-class constant when empty clauses count as true — ``argmax`` is
-    unchanged; tests pin exact equality of scores against the dense path with
-    ``empty_clause_output=1``.
+    The shard-local form of Eq. 4: for each false literal k, the clauses in
+    L[i,k] are falsified; the contribution is ``-Σ_{j falsified} pol_j``
+    (= |C_F^-| - |C_F^+| over the clauses this index covers). With a
+    *clause-sharded* index — every shard owns its own lists over its own
+    clause ids — the falsified-union is shard-local and the partial sums add,
+    so one psum over the clause axis reproduces the global Eq. 4 scores
+    exactly (Σ pol = 0 over all clauses maps Eq. 3 votes onto Eq. 4).
     """
     lit = literals_from_input(x)                          # (B, 2o)
     false_lit = lit == 0                                  # (B, 2o)
     m, L, cap = index.lists.shape
-    n = cfg.n_clauses
+    n = pol.shape[0]                                      # clauses this index covers
     slot_valid = (
         jnp.arange(cap, dtype=jnp.int32)[None, None, :] < index.counts[..., None]
     )                                                     # (m, 2o, cap)
@@ -232,12 +250,23 @@ def indexed_scores(cfg: TMConfig, index: ClauseIndex, x: jax.Array) -> jax.Array
         falsified = falsified.at[
             jnp.arange(m)[:, None, None], ids
         ].max(contrib, mode="drop")
-        pol = jnp.arange(n) < cfg.half_clauses            # positive clauses
-        fp = jnp.sum(falsified & pol[None, :], axis=-1)   # |C_F^+|
-        fn = jnp.sum(falsified & ~pol[None, :], axis=-1)  # |C_F^-|
-        return (fn - fp).astype(jnp.int32)
+        return -jnp.einsum("mn,n->m", falsified.astype(jnp.int32),
+                           pol.astype(jnp.int32))
 
     return jax.vmap(per_sample)(false_lit)
+
+
+def indexed_scores(cfg: TMConfig, index: ClauseIndex, x: jax.Array) -> jax.Array:
+    """(B, o) inputs → (B, m) scores via falsification look-up.
+
+    Scores are |C_F^-| - |C_F^+| (Eq. 4), which equals the vote sum of Eq. 3
+    shifted by a per-class constant when empty clauses count as true —
+    ``argmax`` is unchanged; tests pin exact equality of scores against the
+    dense path with ``empty_clause_output=1``.
+    """
+    from repro.core.types import clause_polarity
+
+    return indexed_partial_scores(index, x, clause_polarity(cfg))
 
 
 def indexed_work(index: ClauseIndex, x: jax.Array) -> jax.Array:

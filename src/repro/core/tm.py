@@ -71,6 +71,20 @@ def predict(cfg: TMConfig, state: TMState, x: jax.Array) -> jax.Array:
     return jnp.argmax(scores(cfg, state, x), axis=-1)
 
 
+def packed_clause_outputs(include_packed: jax.Array, x: jax.Array) -> jax.Array:
+    """(m, n, W) packed includes + (B, o) inputs → (B, m, n) bool outputs.
+
+    Pure-XLA packed eval body, shared by the XLA score paths and the packed
+    engines' shard-local ``partial_scores`` (Eq. 4 semantics: a clause is
+    true iff no included literal is violated).
+    """
+    from repro.core.bitpack import packed_literals
+
+    lit = packed_literals(x)                                     # (B,W)
+    viol = include_packed[None] & (~lit)[:, None, None]          # (B,m,n,W)
+    return ~jnp.any(viol != 0, axis=-1)                          # (B,m,n)
+
+
 def bitpacked_scores_packed(
     cfg: TMConfig, include_packed: jax.Array, x: jax.Array
 ) -> jax.Array:
@@ -80,11 +94,7 @@ def bitpacked_scores_packed(
     kept in sync event-wise by the registry (core/engines.py), so inference
     never repacks the full include mask.
     """
-    from repro.core.bitpack import packed_literals
-
-    lit = packed_literals(x)                                     # (B,W)
-    viol = include_packed[None] & (~lit)[:, None, None]          # (B,m,n,W)
-    out = ~jnp.any(viol != 0, axis=-1)                           # (B,m,n)
+    out = packed_clause_outputs(include_packed, x)
     return clause_votes(cfg, out.astype(jnp.uint8))
 
 
@@ -124,6 +134,21 @@ def draw_feedback_rands(cfg: TMConfig, rng: jax.Array) -> FeedbackRands:
     return FeedbackRands(
         clause_gate=jax.random.uniform(k1, (cfg.n_clauses,)),
         type_i=jax.random.uniform(k2, (cfg.n_clauses, cfg.n_literals)),
+    )
+
+
+def _slice_rands(rands: FeedbackRands, start: jax.Array,
+                 n_local: int) -> FeedbackRands:
+    """Clause-shard slice of a *full* draw (clause-sharded learning).
+
+    Every shard materialises the identical full-size draw and takes its own
+    row block — the only scheme that keeps sharded learning bit-exact with
+    the single-device path (per-shard draws would consume different keys).
+    """
+    return FeedbackRands(
+        clause_gate=jax.lax.dynamic_slice_in_dim(
+            rands.clause_gate, start, n_local, 0),
+        type_i=jax.lax.dynamic_slice_in_dim(rands.type_i, start, n_local, 0),
     )
 
 
@@ -167,25 +192,38 @@ def _type_ii_delta(
 
 def _class_round(
     cfg: TMConfig,
-    ta_row: jax.Array,       # (n, 2o) — states of one class
+    ta_row: jax.Array,       # (n, 2o) — states of one class (or a clause shard)
     lit: jax.Array,          # (2o,)
     rands: FeedbackRands,
     positive_round: jax.Array,  # scalar bool — True: target-class round
+    *,
+    pol: jax.Array | None = None,   # (n,) ±1 — pass the local slice when sharded
+    axis_name: str | None = None,   # mesh clause axis: votes psum over shards
 ) -> jax.Array:
-    """One feedback round for one class; returns updated (n, 2o) states."""
+    """One feedback round for one class; returns updated (n, 2o) states.
+
+    Clause-sharded learning (core/distributed.py) calls this with the local
+    ``ta_row``/``rands``/``pol`` slices and the mesh clause ``axis_name``: the
+    per-class vote is the *only* cross-shard quantity (one psum — the vote
+    all-reduce of the Massively Parallel TM architecture); Type I/II feedback
+    is clause-local given that vote.
+    """
     include = ta_row > cfg.n_states
     false_cnt = jnp.einsum(
         "k,nk->n", (1 - lit).astype(jnp.float32), include.astype(jnp.float32)
     )
     clause_out = (false_cnt < 0.5).astype(jnp.uint8)  # empty clause ⇒ 1 (learning)
+    if pol is None:
+        pol = clause_polarity(cfg)
     t = float(cfg.threshold)
-    votes = jnp.clip(
-        jnp.sum(clause_out.astype(jnp.int32) * clause_polarity(cfg)), -t, t
-    )
+    vote_sum = jnp.sum(clause_out.astype(jnp.int32) * pol)
+    if axis_name is not None:
+        vote_sum = jax.lax.psum(vote_sum, axis_name)
+    votes = jnp.clip(vote_sum, -t, t)
     p = jnp.where(positive_round, (t - votes) / (2 * t), (t + votes) / (2 * t))
     active = rands.clause_gate < p                    # (n,)
 
-    pos_pol = jnp.arange(cfg.n_clauses) < cfg.half_clauses
+    pos_pol = pol > 0
     # target round: positive clauses→Type I, negative→Type II; swapped otherwise
     gets_type_i = jnp.where(positive_round, pos_pol, ~pos_pol)
 
@@ -204,11 +242,21 @@ def update_sample(
     x: jax.Array,        # (o,)
     y: jax.Array,        # () int
     rng: jax.Array,
+    *,
+    pol: jax.Array | None = None,
+    axis_name: str | None = None,
+    clause_start: jax.Array | None = None,
 ) -> TMState:
     """One online update (the paper's per-sample learning).
 
     Target class receives a positive round; one uniformly drawn *other*
     class receives a negative round (standard multiclass TM scheme).
+
+    When ``state`` holds only a clause shard, pass the shard's polarity
+    slice ``pol``, the mesh clause ``axis_name`` (vote psum) and the shard's
+    global ``clause_start`` (rand slicing) — every shard draws the identical
+    full-size randomness and consumes its own rows, so the sharded update is
+    bit-exact with the single-device one.
     """
     lit = literals_from_input(x)
     k_neg, k_a, k_b = jax.random.split(rng, 3)
@@ -217,43 +265,81 @@ def update_sample(
     neg = jnp.where(neg >= y, neg + 1, neg)
 
     ta = state.ta_state
-    row_pos = _class_round(cfg, ta[y], lit, draw_feedback_rands(cfg, k_a),
-                           jnp.asarray(True))
+    rands_a = draw_feedback_rands(cfg, k_a)
+    rands_b = draw_feedback_rands(cfg, k_b)
+    if clause_start is not None:
+        n_local = ta.shape[1]
+        rands_a = _slice_rands(rands_a, clause_start, n_local)
+        rands_b = _slice_rands(rands_b, clause_start, n_local)
+    row_pos = _class_round(cfg, ta[y], lit, rands_a, jnp.asarray(True),
+                           pol=pol, axis_name=axis_name)
     ta = ta.at[y].set(row_pos)
-    row_neg = _class_round(cfg, ta[neg], lit, draw_feedback_rands(cfg, k_b),
-                           jnp.asarray(False))
+    row_neg = _class_round(cfg, ta[neg], lit, rands_b, jnp.asarray(False),
+                           pol=pol, axis_name=axis_name)
     ta = ta.at[neg].set(row_neg)
     return TMState(ta_state=ta)
 
 
 def update_batch_sequential(
-    cfg: TMConfig, state: TMState, xs: jax.Array, ys: jax.Array, rng: jax.Array
+    cfg: TMConfig, state: TMState, xs: jax.Array, ys: jax.Array,
+    rng: jax.Array, *,
+    pol: jax.Array | None = None,
+    axis_name: str | None = None,
+    clause_start: jax.Array | None = None,
 ) -> TMState:
-    """Faithful online learning over a batch: lax.scan of per-sample updates."""
+    """Faithful online learning over a batch: lax.scan of per-sample updates.
+
+    Sharded mode (kwargs set): the *full* batch is scanned on every clause
+    shard — online learning is sequential in samples by definition — with one
+    vote psum per class round as the only collective.
+    """
     keys = jax.random.split(rng, xs.shape[0])
 
     def body(st, inp):
         x, y, k = inp
-        return update_sample(cfg, st, x, y, k), None
+        return update_sample(cfg, st, x, y, k, pol=pol, axis_name=axis_name,
+                             clause_start=clause_start), None
 
     out, _ = jax.lax.scan(body, state, (xs, ys, keys))
     return out
 
 
 def update_batch_parallel(
-    cfg: TMConfig, state: TMState, xs: jax.Array, ys: jax.Array, rng: jax.Array
+    cfg: TMConfig, state: TMState, xs: jax.Array, ys: jax.Array,
+    rng: jax.Array, *,
+    pol: jax.Array | None = None,
+    axis_name: str | None = None,
+    clause_start: jax.Array | None = None,
+    batch_axes: tuple[str, ...] = (),
+    batch_start: jax.Array | None = None,
+    batch_total: int | None = None,
 ) -> TMState:
     """Beyond-paper: batch-parallel update (deltas computed vs the *same*
     pre-batch state, then summed). An approximation of online learning —
     documented in DESIGN.md; used for throughput-oriented training.
+
+    Sharded mode additionally shards the *batch*: ``xs`` holds this data
+    shard's slice of a ``batch_total``-sized global batch starting at
+    ``batch_start``; per-sample keys are the global split sliced to match
+    (bit-exact with the single-device split), and the summed deltas are
+    psum'd over ``batch_axes`` before the clip.
     """
-    keys = jax.random.split(rng, xs.shape[0])
+    if batch_total is None:
+        keys = jax.random.split(rng, xs.shape[0])
+    else:
+        # global key stream, local slice — identical keys per global sample
+        kd = jax.random.key_data(jax.random.split(rng, batch_total))
+        kd = jax.lax.dynamic_slice_in_dim(kd, batch_start, xs.shape[0], 0)
+        keys = jax.random.wrap_key_data(kd)
 
     def one(x, y, k):
-        new = update_sample(cfg, state, x, y, k)
+        new = update_sample(cfg, state, x, y, k, pol=pol, axis_name=axis_name,
+                            clause_start=clause_start)
         return (new.ta_state.astype(jnp.int32) - state.ta_state.astype(jnp.int32))
 
     deltas = jax.vmap(one)(xs, ys, keys).sum(axis=0)
+    if batch_axes:
+        deltas = jax.lax.psum(deltas, batch_axes)
     ta = jnp.clip(
         state.ta_state.astype(jnp.int32) + deltas, 1, 2 * cfg.n_states
     ).astype(cfg.state_dtype)

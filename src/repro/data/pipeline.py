@@ -16,7 +16,7 @@ from typing import Callable, Iterator
 import jax
 import numpy as np
 
-from repro.data.synthetic import token_stream
+from repro.data.synthetic import templated_images, token_stream
 
 
 class TokenBatcher:
@@ -39,6 +39,39 @@ class TokenBatcher:
         toks = toks.reshape(self.local_batch, self.seq + 1)
         return {"tokens": toks[:, :-1].astype(np.int32),
                 "labels": toks[:, 1:].astype(np.int32)}
+
+
+class TMBatcher:
+    """Deterministic (seed, step) → TM batch {"x": (B, o) uint8, "y": (B,)}.
+
+    Class-template Bernoulli images (cf. data/synthetic.py) with the
+    templates fixed by ``seed`` and the per-step noise a pure function of
+    (seed, step) — restarting from a checkpointed step replays the exact
+    batch sequence, the TM fault-tolerance requirement. ``shard_index`` /
+    ``shard_count`` take contiguous row blocks of the *global* batch, so
+    data shards compose back to the single-process stream (bit-exact
+    sharded-vs-single parity in tests/test_tm_sharded.py relies on this).
+    """
+
+    def __init__(self, n_features: int, n_classes: int, batch: int, *,
+                 seed: int = 0, active: float = 0.3, noise: float = 0.05,
+                 shard_index: int = 0, shard_count: int = 1):
+        self.n_features, self.n_classes = n_features, n_classes
+        self.batch, self.seed = batch, seed
+        self.active, self.noise = active, noise
+        self.shard_index, self.shard_count = shard_index, shard_count
+        assert batch % shard_count == 0
+        self.local_batch = batch // shard_count
+        rng = np.random.default_rng(seed)
+        self._templates = rng.uniform(size=(n_classes, n_features)) < active
+
+    def __call__(self, step: int) -> dict:
+        rng = np.random.default_rng(self.seed * 1_000_003 + 7919 * step + 1)
+        x, y = templated_images(self._templates, self.batch,
+                                noise=self.noise, rng=rng)
+        lo = self.shard_index * self.local_batch
+        hi = lo + self.local_batch
+        return {"x": x[lo:hi], "y": y[lo:hi]}
 
 
 class Prefetcher:

@@ -14,14 +14,26 @@ from __future__ import annotations
 import numpy as np
 
 
-def binarized_images(n, o, n_classes=10, *, active=0.3, noise=0.05, seed=0):
-    """Class-template Bernoulli images → (x (n, o) uint8, y (n,) int32)."""
-    rng = np.random.default_rng(seed)
-    templates = rng.uniform(size=(n_classes, o)) < active
+def templated_images(templates, n, *, noise=0.05, rng):
+    """Draw n noisy samples from fixed class templates → (x uint8, y int32).
+
+    The single source of the template⊕flip scheme: ``binarized_images``
+    (one-shot datasets) and ``data/pipeline.TMBatcher`` (step-indexed
+    training/serving streams) both sample through here, so the training and
+    serving distributions cannot silently diverge.
+    """
+    n_classes, o = templates.shape
     y = rng.integers(0, n_classes, n).astype(np.int32)
     flip = rng.uniform(size=(n, o)) < noise
     x = templates[y] ^ flip
     return x.astype(np.uint8), y
+
+
+def binarized_images(n, o, n_classes=10, *, active=0.3, noise=0.05, seed=0):
+    """Class-template Bernoulli images → (x (n, o) uint8, y (n,) int32)."""
+    rng = np.random.default_rng(seed)
+    templates = rng.uniform(size=(n_classes, o)) < active
+    return templated_images(templates, n, noise=noise, rng=rng)
 
 
 def bow_documents(n, o, n_classes=2, *, active_frac=0.01, signal=40, seed=0):

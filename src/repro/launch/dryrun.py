@@ -15,7 +15,7 @@ import jax               # noqa: E402
 from repro.configs import (  # noqa: E402
     ARCHS, SKIPPED_CELLS, get_config, get_shape, shapes_for)
 from repro.launch import hlo as hlo_mod  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_context  # noqa: E402
 from repro.sharding import named_shardings  # noqa: E402
 from repro.steps import make_step  # noqa: E402
 
@@ -42,7 +42,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     # donate what the next step overwrites: train → state, decode → caches;
     # serving params are shared across steps and must never be donated.
     donate = {"train": (0,), "decode": (1,), "prefill": ()}[step.meta["kind"]]
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         jitted = jax.jit(step.fn, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=donate)
         lowered = jitted.lower(*step.arg_structs)
@@ -92,6 +92,78 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     return record
 
 
+def run_tm_checks(*, data: int = 2, model: int = 4, batch: int = 16,
+                  train_batch: int = 8, save: bool = True) -> dict:
+    """Lower + compile the clause-sharded TM path; assert the vote HLO.
+
+    For every registered engine: the sharded ``scores`` program must contain
+    **exactly one** collective, and it must be the (B, m) vote all-reduce —
+    the Massively Parallel TM contract (DESIGN.md §6). The sharded
+    ``train_step`` may psum a vote per class round (+ delta reductions in
+    parallel mode) but must never gather state or caches: every collective
+    has to be an all-reduce.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import TMConfig, registered_engines
+    from repro.core.distributed import (
+        make_sharded_prepare, make_sharded_scores, make_sharded_train_step)
+    from repro.core.engines import get_engine
+    from repro.core.types import init_tm
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = TMConfig(n_classes=10, n_clauses=256, n_features=196)
+    mesh = make_host_mesh(data=data, model=model)
+    bundle = make_sharded_prepare(cfg, mesh)(init_tm(cfg))
+    xs = jnp.zeros((batch, cfg.n_features), jnp.uint8)
+    record: dict = {"mesh": f"{data}x{model}", "engines": {}, "failures": []}
+
+    for name in registered_engines():
+        eng = get_engine(name)
+        s = make_sharded_scores(cfg, mesh, engine=name)
+        cache = (bundle.state if not eng.needs_cache
+                 else bundle.caches[eng.cache_key])
+        compiled = s.jitted.lower(cache, s.pol, xs).compile()
+        coll = hlo_mod.collective_stats(compiled.as_text())
+        ok = coll.count == 1 and set(coll.by_kind) == {"all-reduce"}
+        record["engines"][name] = {
+            "collective_count": coll.count, "by_kind": coll.by_kind,
+            "one_vote_all_reduce": ok}
+        print(f"[tm] scores/{name}: collectives={coll.by_kind} "
+              f"count={coll.count} {'OK' if ok else 'FAIL'}", flush=True)
+        if not ok:
+            record["failures"].append(
+                f"scores/{name}: expected exactly one vote all-reduce, got "
+                f"{coll.by_kind} (count={coll.count})")
+
+    for parallel in (False, True):
+        step = make_sharded_train_step(cfg, mesh, parallel=parallel,
+                                       max_events=1024)
+        txs = jnp.zeros((train_batch, cfg.n_features), jnp.uint8)
+        tys = jnp.zeros((train_batch,), jnp.int32)
+        kd = jax.random.key_data(jax.random.key(0))
+        compiled = step.jitted.lower(bundle.state, bundle.caches, step.pol,
+                                     txs, tys, kd).compile()
+        coll = hlo_mod.collective_stats(compiled.as_text())
+        ok = set(coll.by_kind) <= {"all-reduce"}
+        key = f"train_step_{'parallel' if parallel else 'sequential'}"
+        record[key] = {"collective_count": coll.count,
+                       "by_kind": coll.by_kind, "all_reduce_only": ok}
+        print(f"[tm] {key}: collectives={coll.by_kind} count={coll.count} "
+              f"{'OK' if ok else 'FAIL'}", flush=True)
+        if not ok:
+            record["failures"].append(
+                f"{key}: feedback must stay shard-local — found "
+                f"{coll.by_kind}")
+
+    if save:
+        out = RESULTS / "tm"
+        out.mkdir(parents=True, exist_ok=True)
+        (out / f"{record['mesh']}.json").write_text(
+            json.dumps(record, indent=2))
+    return record
+
+
 def main():
     ap = argparse.ArgumentParser(description="multi-pod dry-run")
     ap.add_argument("--arch", default=None)
@@ -99,7 +171,21 @@ def main():
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="both")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tm", action="store_true",
+                    help="clause-sharded TM lowering checks (every engine; "
+                         "asserts the single vote all-reduce)")
     args = ap.parse_args()
+
+    if args.tm:
+        record = run_tm_checks()
+        if record["failures"]:
+            print(f"\n{len(record['failures'])} TM FAILURES:")
+            for f in record["failures"]:
+                print("  ", f)
+            raise SystemExit(1)
+        print("\nTM sharded lowering: all engines OK "
+              "(one vote all-reduce; shard-local feedback)")
+        return
 
     cells = []
     archs = ARCHS if (args.all or not args.arch) else (args.arch,)

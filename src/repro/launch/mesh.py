@@ -8,6 +8,28 @@ from __future__ import annotations
 import jax
 
 
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` where available; the ``Mesh`` context manager
+    on older jax (0.4.x has no ``jax.set_mesh`` — entering the mesh itself
+    sets the resource env, which is all the explicit-NamedSharding jit
+    call sites here need)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
+def _mesh_kwargs(n_axes: int) -> dict:
+    """``axis_types=`` only where the installed jax supports it.
+
+    ``jax.sharding.AxisType`` landed after 0.4.37 (the container's jax);
+    older versions treat every axis as Auto already, so omitting the kwarg
+    is semantically identical there.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips).
 
@@ -26,9 +48,8 @@ def make_production_mesh(*, multi_pod: bool = False):
             "must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "before importing jax")
     import numpy as np
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
     return jax.sharding.Mesh(
-        np.asarray(devices).reshape(shape), axes, axis_types=axis_types)
+        np.asarray(devices).reshape(shape), axes, **_mesh_kwargs(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -38,7 +59,6 @@ def make_host_mesh(data: int = 1, model: int = 1):
     devices = jax.devices()[:n]
     if len(devices) < n:
         raise RuntimeError(f"need {n} devices, have {len(devices)}")
-    axis_types = (jax.sharding.AxisType.Auto,) * 2
     return jax.sharding.Mesh(
         np.asarray(devices).reshape(data, model), ("data", "model"),
-        axis_types=axis_types)
+        **_mesh_kwargs(2))

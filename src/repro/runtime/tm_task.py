@@ -1,0 +1,125 @@
+"""TM training task for the fault-tolerant ``Trainer`` — single or sharded.
+
+Glue that turns a ``TMConfig`` (+ optionally a mesh) into the four pieces
+``runtime/trainer.py`` consumes:
+
+  * ``step_fn(state, batch)`` — one jitted ``train_step`` over a TM bundle;
+    the step RNG is ``fold_in(root_key, step)``, a pure function of the step
+    index, so a restarted run consumes *identical* randomness;
+  * ``state`` — ``{"bundle": TMBundle, "step": i32}``;
+  * ``batcher`` — a deterministic (seed, step) ``TMBatcher`` stream;
+  * ``to_ckpt`` / ``from_ckpt`` — checkpoint *views*: only the TA state and
+    step counter persist; every engine cache is derived data, re-prepared on
+    restore **on the current mesh**. That is what makes elastic
+    reshard-on-restore work: shard-local cache layouts change shape with the
+    clause-shard count, but the checkpoint never contains them.
+
+Metrics per step: batch accuracy *before* the update (through a registry
+engine), so the log doubles as an online-learning curve.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import TMConfig, TMState
+from repro.core.api import (
+    DEFAULT_ENGINE, TMBundle, bundle_predict, init_bundle, train_step_jit)
+from repro.core.distributed import ShardedTM
+from repro.core.types import init_tm
+from repro.data.pipeline import TMBatcher
+
+
+@dataclasses.dataclass
+class TMTask:
+    """Everything a ``Trainer`` needs to run a TM, plus the restore hooks."""
+
+    step_fn: Callable
+    state: dict[str, Any]
+    batcher: TMBatcher
+    to_ckpt: Callable
+    from_ckpt: Callable
+
+
+_predict_jit = jax.jit(bundle_predict, static_argnames=("engine",))
+
+
+def make_tm_task(
+    cfg: TMConfig,
+    *,
+    mesh=None,
+    engines=None,
+    batch: int = 32,
+    seed: int = 0,
+    data_seed: int = 7,
+    parallel: bool = False,
+    max_events: int = 4096,
+    metrics_engine: str | None = None,
+    metrics_every: int = 1,
+) -> TMTask:
+    """Build a TM training task; pass ``mesh`` for the clause-sharded path.
+
+    ``metrics_engine`` defaults to ``DEFAULT_ENGINE`` when that engine is
+    among the prepared ones, else to the first requested engine — the
+    bundle only carries caches for ``engines``. ``metrics_every`` skips the
+    pre-update accuracy pass on the other steps (set it to the trainer's
+    ``log_every``: inference through the metrics engine costs a full eval
+    per batch, wasted on steps whose metrics are never logged).
+    """
+    if metrics_engine is None:
+        names = tuple(engines) if engines is not None else ()
+        metrics_engine = (DEFAULT_ENGINE
+                          if engines is None or DEFAULT_ENGINE in names
+                          else names[0])
+    root = jax.random.key(seed)
+    batcher = TMBatcher(cfg.n_features, cfg.n_classes, batch, seed=data_seed)
+
+    if mesh is None:
+        bundle = init_bundle(cfg, engines=engines)
+        sharded = None
+
+        def predict(b: TMBundle, x):
+            return _predict_jit(b, x, engine=metrics_engine)
+    else:
+        sharded = ShardedTM(cfg, mesh, engines=engines, parallel=parallel,
+                            max_events=max_events)
+        bundle = sharded.prepare(init_tm(cfg))
+
+        def predict(b: TMBundle, x):
+            # a sharded bundle's caches are shard-local layouts — they must
+            # be read through the sharded scores path, never bundle_scores
+            return jnp.argmax(sharded.scores(b, x, engine=metrics_engine), -1)
+
+    def step_fn(state: dict, batch_: dict):
+        b = state["bundle"]
+        rng = jax.random.fold_in(root, state["step"])
+        metrics = {}
+        if (int(state["step"]) + 1) % metrics_every == 0:  # logged steps only
+            pred = predict(b, batch_["x"])
+            metrics = {"acc": jnp.mean(
+                (pred == batch_["y"]).astype(jnp.float32))}
+        if sharded is None:
+            nb = train_step_jit(b, batch_["x"], batch_["y"], rng,
+                                parallel=parallel, max_events=max_events)
+        else:
+            nb = sharded.train_step(b, batch_["x"], batch_["y"], rng)
+        return {"bundle": nb, "step": state["step"] + 1}, metrics
+
+    def to_ckpt(state: dict) -> dict:
+        return {"ta_state": state["bundle"].state.ta_state,
+                "step": state["step"]}
+
+    def from_ckpt(loaded: dict, state: dict) -> dict:
+        ta = TMState(ta_state=jnp.asarray(loaded["ta_state"]))
+        if sharded is None:
+            bundle = init_bundle(cfg, engines=engines, state=ta)
+        else:
+            bundle = sharded.prepare(ta)  # caches rebuilt on the current mesh
+        return {"bundle": bundle, "step": jnp.asarray(loaded["step"])}
+
+    state = {"bundle": bundle, "step": jnp.asarray(0, jnp.int32)}
+    return TMTask(step_fn=step_fn, state=state, batcher=batcher,
+                  to_ckpt=to_ckpt, from_ckpt=from_ckpt)

@@ -12,7 +12,13 @@ Production behaviours implemented (and exercised by tests/test_runtime.py):
     ``straggler_factor``× the watermark fire a callback (production: evict /
     re-shard; here: recorded + logged);
   * elastic restart — restore() takes the *current* mesh's shardings, so a
-    2-pod checkpoint restores onto 1 pod (reshard-on-restore).
+    2-pod checkpoint restores onto 1 pod (reshard-on-restore);
+  * checkpoint views — ``to_ckpt``/``from_ckpt`` hooks let the train state
+    carry derived data that should be *rebuilt*, not persisted: a TM bundle
+    checkpoints only its TA state, and restore re-prepares every engine
+    cache on the *current* mesh (runtime/tm_task.py) — which is exactly what
+    makes reshard-on-restore work when the shard-local cache layouts change
+    shape with the mesh.
 """
 from __future__ import annotations
 
@@ -42,13 +48,19 @@ class SimulatedFailure(RuntimeError):
 class Trainer:
     def __init__(self, *, step_fn, state, batcher, checkpointer: Checkpointer,
                  loop: TrainLoopConfig,
-                 on_straggler: Optional[Callable[[int, float], None]] = None):
+                 on_straggler: Optional[Callable[[int, float], None]] = None,
+                 to_ckpt: Optional[Callable] = None,
+                 from_ckpt: Optional[Callable] = None):
         self.step_fn = step_fn
         self.state = state
         self.batcher = batcher
         self.ckpt = checkpointer
         self.loop = loop
         self.on_straggler = on_straggler or (lambda s, t: None)
+        # checkpoint views: persist to_ckpt(state); rebuild derived data on
+        # restore via from_ckpt(loaded, current_state). Defaults: identity.
+        self.to_ckpt = to_ckpt or (lambda state: state)
+        self.from_ckpt = from_ckpt or (lambda loaded, state: loaded)
         self.metrics_log: list = []
         self.stragglers: list = []
 
@@ -56,7 +68,8 @@ class Trainer:
         step = self.ckpt.latest_step()
         if step is None:
             return 0
-        self.state = self.ckpt.restore(step, self.state, shardings)
+        loaded = self.ckpt.restore(step, self.to_ckpt(self.state), shardings)
+        self.state = self.from_ckpt(loaded, self.state)
         return step
 
     def run(self, start_step: Optional[int] = None) -> int:
@@ -66,7 +79,9 @@ class Trainer:
             batch = self.batcher(step)
             t0 = time.perf_counter()
             self.state, metrics = self.step_fn(self.state, batch)
-            jax.block_until_ready(metrics)
+            # block on the state too: steps whose metrics are cheap (or
+            # skipped) must still charge the straggler timer for the update
+            jax.block_until_ready((self.state, metrics))
             dt = time.perf_counter() - t0
             # straggler watermark
             if ewma is None:
@@ -81,9 +96,9 @@ class Trainer:
                 self.metrics_log.append(
                     (step, {k: float(v) for k, v in metrics.items()}))
             if step % self.loop.ckpt_every == 0:
-                self.ckpt.save(step, self.state)
+                self.ckpt.save(step, self.to_ckpt(self.state))
             if self.loop.failure_at is not None and step == self.loop.failure_at:
                 self.ckpt.wait()
                 raise SimulatedFailure(f"injected failure at step {step}")
-        self.ckpt.save(step, self.state, blocking=True)
+        self.ckpt.save(step, self.to_ckpt(self.state), blocking=True)
         return step

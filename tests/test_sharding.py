@@ -23,7 +23,7 @@ SCRIPT = textwrap.dedent("""
 
     from repro.configs import get_config
     from repro.configs.base import ShapeSpec
-    from repro.launch.mesh import make_host_mesh
+    from repro.launch.mesh import make_host_mesh, mesh_context
     from repro.models.model import build
     from repro.sharding import Policy, named_shardings, param_specs
     from repro.steps import make_decode_step, make_train_step
@@ -54,7 +54,7 @@ SCRIPT = textwrap.dedent("""
     dstep = make_decode_step(cfg, dshape, mesh)
     in_sh = named_shardings(mesh, dstep.in_specs)
     out_sh = named_shardings(mesh, dstep.out_specs)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         fn = jax.jit(dstep.fn, in_shardings=in_sh, out_shardings=out_sh)
         c2 = jax.device_put(model.init_cache(2, 16), in_sh[1])
         p2 = jax.device_put(params, in_sh[0])
@@ -86,7 +86,7 @@ SCRIPT = textwrap.dedent("""
     new_ref, m_ref = jax.jit(tstep_ref.fn)(state, batch)
     in_sh = named_shardings(mesh, tstep.in_specs)
     out_sh = named_shardings(mesh, tstep.out_specs)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         fns = jax.jit(tstep.fn, in_shardings=in_sh, out_shardings=out_sh)
         new_sh, m_sh = fns(jax.device_put(state, in_sh[0]),
                            jax.device_put(batch, in_sh[1]))
@@ -105,7 +105,7 @@ SCRIPT = textwrap.dedent("""
     xm = jnp.asarray(rng.normal(size=(4, 8, 32)) * 0.3, jnp.float32)
     out_ref, aux_ref = moe_block(pm, xm, top_k=2, capacity_factor=1.5,
                                  policy=Policy.none())
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         pol = Policy.for_mesh(mesh)
         pm_sh = jax.device_put(pm, NamedSharding(mesh, P()))
         fn = jax.jit(lambda p, x: moe_block(
@@ -128,26 +128,26 @@ SCRIPT = textwrap.dedent("""
     ref = xpp
     for si in range(S):
         ref = jax.vmap(lambda xm: stage(Ws[si], xm))(ref)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         outpp = jax.jit(lambda p, xx: gpipe_apply(
             stage, p, xx, mesh=mesh, axis="data"))(Ws, xpp)
     np.testing.assert_allclose(np.asarray(outpp), np.asarray(ref),
                                rtol=1e-5, atol=1e-6)
     print("gpipe-ok")
 
-    # ---- TM: clause-sharded votes == local votes ----
-    from repro.core import TMConfig, init_tm, scores
-    from repro.core.distributed import make_sharded_votes, tm_shardings
+    # ---- TM: clause-sharded bundle scores == local scores ----
+    # (the full registry-driven engine/train parity matrix lives in
+    #  tests/test_tm_sharded.py; this is the cross-stack smoke check)
+    from repro.core import TMConfig, scores
+    from repro.core.distributed import make_sharded_prepare, make_sharded_scores
     tmc = TMConfig(n_classes=4, n_clauses=32, n_features=24, n_states=40)
     rng2 = np.random.default_rng(7)
     ta = jnp.asarray(rng2.integers(1, 81, (4, 32, 48)), jnp.int16)
     xs = jnp.asarray(rng2.integers(0, 2, (8, 24)), jnp.uint8)
     from repro.core.types import TMState
     want = scores(tmc, TMState(ta_state=ta), xs)
-    with jax.set_mesh(mesh):
-        fn = make_sharded_votes(tmc, mesh)
-        st_sh, x_sh, _, _ = tm_shardings(tmc, mesh)
-        got = fn(jax.device_put(ta, st_sh), jax.device_put(xs, x_sh))
+    bundle = make_sharded_prepare(tmc, mesh)(TMState(ta_state=ta))
+    got = make_sharded_scores(tmc, mesh, engine="dense")(bundle, xs)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
     print("tm-shard-ok")
 """)

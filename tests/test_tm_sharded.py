@@ -1,0 +1,141 @@
+"""Clause-sharded TMBundle parity on a forced 8-device host mesh.
+
+Registry-driven (subprocess, ``--xla_force_host_platform_device_count=8``):
+
+  * every registered engine's sharded ``scores`` is bit-exact vs the
+    single-device dense reference;
+  * the sharded ``train_step`` (sequential *and* batch-parallel) produces a
+    bit-exact TA state vs the single-device ``api.train_step``, and every
+    engine's shard-local cache stays a faithful mirror (scores parity after
+    training proves the event sync);
+  * the fault-tolerant trainer checkpoints a sharded TM bundle, crashes,
+    and restores **onto a different mesh** (reshard-on-restore: 4 clause
+    shards → 2), continuing bit-exactly vs an uninterrupted single-device
+    trainer run.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (
+        TMConfig, TMState, bundle_scores, init_bundle, registered_engines,
+        train_step)
+    from repro.core.distributed import (
+        ShardedTM, make_sharded_prepare, make_sharded_scores,
+        make_sharded_train_step)
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = TMConfig(n_classes=3, n_clauses=16, n_features=12, n_states=50,
+                   s=3.0, threshold=4)
+    ALL = cfg.n_classes * cfg.n_clauses * cfg.n_literals
+    rng = np.random.default_rng(0)
+    inc = rng.uniform(size=(3, 16, 24)) < 0.4
+    state = TMState(ta_state=jnp.asarray(
+        np.where(inc, cfg.n_states + 1, cfg.n_states), jnp.int16))
+    xs_eval = jnp.asarray(rng.integers(0, 2, (8, 12)), jnp.uint8)
+
+    mesh = make_host_mesh(data=2, model=4)
+    ref = init_bundle(cfg, state=state)
+    stm = ShardedTM(cfg, mesh, max_events=ALL)
+    sb = stm.prepare(state)
+
+    # ---- scores parity: every registered engine, bit-exact vs dense ----
+    want = np.asarray(bundle_scores(ref, xs_eval, engine="dense"))
+    for name in registered_engines():
+        got = np.asarray(stm.scores(sb, xs_eval, engine=name))
+        np.testing.assert_array_equal(got, want, err_msg=name)
+    print("tm-scores-parity-ok")
+
+    # ---- train parity: both learning modes, caches mirrored ----
+    for parallel in (False, True):
+        step = make_sharded_train_step(cfg, mesh, parallel=parallel,
+                                       max_events=ALL)
+        b_ref, b_sh = ref, stm.prepare(state)
+        key = jax.random.key(1)
+        for _ in range(3):
+            key, sub = jax.random.split(key)
+            bx = jnp.asarray(rng.integers(0, 2, (8, 12)), jnp.uint8)
+            by = jnp.asarray(rng.integers(0, 3, 8), jnp.int32)
+            b_ref = train_step(b_ref, bx, by, sub, parallel=parallel,
+                               max_events=ALL)
+            b_sh = step(b_sh, bx, by, sub)
+        np.testing.assert_array_equal(
+            np.asarray(b_sh.state.ta_state), np.asarray(b_ref.state.ta_state),
+            err_msg=f"parallel={parallel}")
+        want2 = np.asarray(bundle_scores(b_ref, xs_eval, engine="dense"))
+        for name in registered_engines():
+            got2 = np.asarray(stm.scores(b_sh, xs_eval, engine=name))
+            np.testing.assert_array_equal(
+                got2, want2, err_msg=f"{name} parallel={parallel}")
+    print("tm-train-parity-ok")
+
+    # ---- trainer: sharded checkpoint → crash → reshard-on-restore ----
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.runtime.tm_task import make_tm_task
+    from repro.runtime.trainer import (
+        SimulatedFailure, Trainer, TrainLoopConfig)
+
+    def build(task, ckpt_dir, total, failure_at=None):
+        return Trainer(step_fn=task.step_fn, state=task.state,
+                       batcher=task.batcher,
+                       checkpointer=Checkpointer(ckpt_dir, keep=10),
+                       loop=TrainLoopConfig(total_steps=total, ckpt_every=3,
+                                            log_every=1,
+                                            failure_at=failure_at),
+                       to_ckpt=task.to_ckpt, from_ckpt=task.from_ckpt)
+
+    tmp = tempfile.mkdtemp()
+    kw = dict(batch=8, seed=3, data_seed=11, max_events=ALL)
+
+    ref_tr = build(make_tm_task(cfg, **kw), tmp + "/ref", 8)
+    ref_tr.run()
+    ref_ta = np.asarray(ref_tr.state["bundle"].state.ta_state)
+
+    tr = build(make_tm_task(cfg, mesh=mesh, **kw), tmp + "/ft", 8,
+               failure_at=5)
+    try:
+        tr.run()
+        raise AssertionError("expected injected failure")
+    except SimulatedFailure:
+        pass
+
+    mesh2 = make_host_mesh(data=4, model=2)   # different clause-shard count
+    tr2 = build(make_tm_task(cfg, mesh=mesh2, **kw), tmp + "/ft", 8)
+    resumed = tr2.restore_if_available()
+    assert resumed == 3, resumed
+    tr2.run(start_step=resumed)
+    np.testing.assert_array_equal(
+        np.asarray(tr2.state["bundle"].state.ta_state), ref_ta)
+    # the rebuilt shard-local caches on mesh2 serve identical scores
+    stm2 = ShardedTM(cfg, mesh2, max_events=ALL)
+    want3 = np.asarray(bundle_scores(ref_tr.state["bundle"], xs_eval,
+                                     engine="dense"))
+    for name in registered_engines():
+        got3 = np.asarray(stm2.scores(tr2.state["bundle"], xs_eval,
+                                      engine=name))
+        np.testing.assert_array_equal(got3, want3, err_msg=name)
+    print("tm-trainer-reshard-ok")
+""")
+
+
+@pytest.mark.slow
+def test_tm_sharded_parity_subprocess():
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    for marker in ("tm-scores-parity-ok", "tm-train-parity-ok",
+                   "tm-trainer-reshard-ok"):
+        assert marker in res.stdout, res.stdout + "\n" + res.stderr
