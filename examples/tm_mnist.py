@@ -1,12 +1,16 @@
 """End-to-end example (the paper's experiment): TM on MNIST-like data.
 
     PYTHONPATH=src python examples/tm_mnist.py [--epochs 5] [--clauses 512]
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+        python examples/tm_mnist.py --clause-shards 4
 
 Full flow: synthetic binarized-MNIST stream → sequential (paper-faithful)
-TM learning through the jit-native estimator → event-driven engine-cache
-maintenance → per-epoch accuracy → per-engine throughput comparison +
-work-ratio report → checkpoint/restore round-trip through the shared
-checkpointer.
+TM learning through the topology-aware estimator (pass ``--clause-shards``
+/ ``--data-shards`` to run the identical script clause-sharded, bit-exact)
+→ event-driven engine-cache maintenance → per-epoch accuracy → per-engine
+throughput comparison + work-ratio report → versioned checkpoint
+save/restore round-trip (schema v1: state + config fingerprint; caches
+rebuild on the loading topology).
 """
 import argparse
 import time
@@ -15,8 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.checkpointer import Checkpointer
-from repro.core import TMConfig, TsetlinMachine, registered_engines
+from repro.core import TMConfig, Topology, TsetlinMachine, registered_engines
 from repro.core.indexing import dense_work, indexed_work
 from repro.data.synthetic import binarized_images
 
@@ -28,6 +31,8 @@ def main():
     ap.add_argument("--features", type=int, default=784)
     ap.add_argument("--train", type=int, default=2048)
     ap.add_argument("--test", type=int, default=512)
+    ap.add_argument("--clause-shards", type=int, default=1)
+    ap.add_argument("--data-shards", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_tm_ckpt")
     ap.add_argument("--engines", default=None,
                     help="comma-separated engine names (default: registry)")
@@ -41,19 +46,29 @@ def main():
     x_tr = jnp.asarray(x[:args.train]); y_tr = jnp.asarray(y[:args.train])
     x_te = jnp.asarray(x[args.train:]); y_te = jnp.asarray(y[args.train:])
 
-    engines = (tuple(args.engines.split(",")) if args.engines
-               else registered_engines())
-    machine = TsetlinMachine(cfg, engines=engines, seed=42).init()
-    ckpt = Checkpointer(args.ckpt_dir, keep=2)
+    engines = tuple(args.engines.split(",")) if args.engines else None
+    topology = Topology(clause_shards=args.clause_shards,
+                        data_shards=args.data_shards, engines=engines)
+    # full-batch epochs cross many TA boundaries per step: size the event
+    # buffer to the worst case so every cache stays an exact mirror (an
+    # overflowed buffer drops events — a silent-staleness config error the
+    # state-only checkpoint roundtrip below would catch)
+    all_events = cfg.n_classes * cfg.n_clauses * cfg.n_literals
+    machine = TsetlinMachine(cfg, topology=topology, seed=42,
+                             max_events_per_batch=all_events).init()
+    engines = machine.engines
+    # sharded caches can't build on the fly: evaluate through a maintained one
+    eval_engine = "indexed" if "indexed" in engines else engines[0]
+    print("topology:", machine.session.describe())
 
     for epoch in range(args.epochs):
         t0 = time.time()
         machine.partial_fit(x_tr, y_tr)
         dt = time.time() - t0
-        acc = machine.evaluate(x_te, y_te, engine="indexed")
+        acc = machine.evaluate(x_te, y_te, engine=eval_engine)
         print(f"epoch {epoch}: acc={acc:.3f}  "
               f"train {args.train/dt:.0f} samples/s")
-        ckpt.save(epoch, machine.as_pytree(), blocking=True)
+        machine.save(args.ckpt_dir, step=epoch, keep=2)
 
     # inference engine comparison (the paper's Table-4 style measurement),
     # driven through the registry — new engines show up automatically
@@ -67,18 +82,21 @@ def main():
         print(f"  {engine:12s}: {us:8.1f} us/sample")
 
     idx = machine.bundle.caches.get("indexed")
-    if idx is None:  # --engines excluded 'indexed': build once for the report
+    if idx is None or machine.session.is_sharded:
+        # --engines excluded 'indexed', or the maintained cache is a
+        # shard-local layout (readable only through the sharded scores
+        # path): build a global index once for the work-ratio report
         from repro.core import get_engine
         idx = get_engine("indexed").prepare(cfg, machine.state)
     w = float(np.asarray(indexed_work(idx, x_te)).mean())
     print(f"\nwork ratio: {w / dense_work(cfg):.4f} "
           "(paper reports ≈0.02 on trained MNIST TMs)")
 
-    # checkpoint round-trip
-    restored = TsetlinMachine(cfg).load_pytree(
-        ckpt.restore(ckpt.latest_step(), machine.as_pytree()))
-    same = bool(jnp.all(restored.predict(x_te, engine="indexed")
-                        == machine.predict(x_te, engine="indexed")))
+    # versioned checkpoint round-trip — always restores single-device here,
+    # regardless of the training topology (reshard-on-restore)
+    restored = TsetlinMachine.load(args.ckpt_dir, cfg)
+    same = bool(jnp.all(restored.predict(x_te, engine=eval_engine)
+                        == machine.predict(x_te, engine=eval_engine)))
     print("checkpoint restore round-trip:", "ok" if same else "MISMATCH")
 
 

@@ -19,9 +19,9 @@ echo "== tier-1 tests =="
 # Deselected: pre-existing-at-seed mixtral prefill/decode mismatch (tracked
 # as a ROADMAP.md open item). The sharding subprocess test is back in (the
 # jax-compat shims in launch/mesh.py + sharding.py fixed it on jax 0.4.37),
-# and the TM sharded-parity subprocess test rides with it — the two `slow`
-# tests put this gate at ~20 min on the 1-core container; use
-# `pytest -m "not slow"` for a fast local loop (pytest.ini).
+# and the TM sharded-parity + session-topology-parity subprocess tests ride
+# with it — the three `slow` tests put this gate at ~30 min on the 1-core
+# container; use `pytest -m "not slow"` for a fast local loop (pytest.ini).
 python -m pytest -x -q \
   --deselect "tests/test_models_smoke.py::test_prefill_decode_consistency[mixtral-8x7b]"
 
@@ -31,18 +31,28 @@ python examples/quickstart.py
 echo "== benchmark smoke cell =="
 python -m benchmarks.run --smoke
 
-echo "== tm_serve smoke (batched TM serving) =="
+echo "== tm_serve smoke (sharded TM serving on a forced 4-device mesh) =="
 rm -f BENCH_tm_serve.json
-python -m repro.launch.tm_serve --smoke
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  python -m repro.launch.tm_serve --smoke
 python - <<'EOF'
 import json
 d = json.load(open("BENCH_tm_serve.json"))
 assert d["engines"], "no engine records in BENCH_tm_serve.json"
+# the smoke must exercise the sharded scores path on the 4-device mesh and
+# record the device count + per-device-count batch-axis scaling
+assert d["devices"] == 4, f"device count not recorded: {d.get('devices')}"
+assert d["topology"]["sharded"], d["topology"]
+sweep = {row["devices"]: row for row in d["batch_axis_scaling"]}
+assert set(sweep) == {1, 2, 4}, sweep
+for n_dev, row in sweep.items():
+    assert row["throughput_rps"] > 0, (n_dev, row)
 for name, r in d["engines"].items():
     lat = r["latency_ms"]
     assert {"p50", "p90", "p95", "p99"} <= set(lat), (name, lat)
     assert r["throughput_rps"] > 0, (name, r)
-print("BENCH_tm_serve.json well-formed:", ", ".join(d["engines"]))
+print("BENCH_tm_serve.json well-formed:", ", ".join(d["engines"]),
+      "| scaling devices:", sorted(sweep))
 EOF
 
 echo "CI smoke: OK"

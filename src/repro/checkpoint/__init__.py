@@ -1,1 +1,18 @@
-"""checkpoint substrate."""
+"""checkpoint substrate: generic sharded Checkpointer + the versioned TM
+checkpoint schema (state + config fingerprint only — tm_store.py)."""
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.tm_store import (
+    SCHEMA_VERSION,
+    CheckpointMismatch,
+    checkpoint_tree,
+    config_fingerprint,
+    load_tm,
+    save_tm,
+    validate_meta,
+)
+
+__all__ = [
+    "Checkpointer", "SCHEMA_VERSION", "CheckpointMismatch",
+    "checkpoint_tree", "config_fingerprint", "load_tm", "save_tm",
+    "validate_meta",
+]

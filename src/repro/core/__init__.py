@@ -44,12 +44,16 @@ from repro.core.engines import (
 )
 from repro.core.api import (
     TMBundle,
-    TsetlinMachine,
     bundle_predict,
     bundle_scores,
     init_bundle,
     train_step,
     train_step_jit,
+)
+from repro.core.session import (
+    TMSession,
+    Topology,
+    TsetlinMachine,
 )
 
 __all__ = [
@@ -61,6 +65,7 @@ __all__ = [
     "compact_scores", "delete", "dense_work", "empty_index",
     "events_from_transition", "indexed_scores", "indexed_work", "insert",
     "validate", "validate_compact", "EvalEngine", "get_engine", "register_engine",
-    "registered_engines", "TMBundle", "TsetlinMachine", "bundle_predict",
-    "bundle_scores", "init_bundle", "train_step", "train_step_jit",
+    "registered_engines", "TMBundle", "TMSession", "Topology",
+    "TsetlinMachine", "bundle_predict", "bundle_scores", "init_bundle",
+    "train_step", "train_step_jit",
 ]

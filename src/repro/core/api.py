@@ -12,13 +12,14 @@ Layering (DESIGN.md):
     registry provider. ``jax.jit``s end-to-end; no Python-level mutation, no
     host sync inside the step. ``train_step_jit`` donates the input bundle
     (on backends that support donation) so TA states update in place.
-  * ``TsetlinMachine`` — a thin stateful facade (init / fit / partial_fit /
-    predict / scores / evaluate) for scripts and examples; all real work is
-    in the pure functions, which distributed/serving code calls directly.
+The estimator facade (``TsetlinMachine``) and the topology resolution layer
+(``Topology`` / ``TMSession``) live in ``core/session.py``; this module is
+the pure single-device substrate both paths share.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Iterable
 
 import jax
@@ -90,17 +91,33 @@ def init_bundle(
     return TMBundle(cfg=cfg, state=state, caches=caches)
 
 
+# cache_keys whose on-the-fly rebuild has already been warned about once —
+# a missing slot silently rebuilding per call is a config smell (the engine
+# should be in the bundle's engines=), but it is not an error.
+_REBUILD_WARNED: set[str] = set()
+
+
 def bundle_scores(
     bundle: TMBundle, x: jax.Array, *, engine: str = DEFAULT_ENGINE
 ) -> jax.Array:
     """(B, o) → (B, m) scores via a registered engine (pure, jittable).
 
     Uses the bundle's maintained cache when present; otherwise prepares one
-    on the fly (still pure — just does rebuild work per call).
+    on the fly (still pure — just does rebuild work per call, and warns once
+    per cache slot so the rebuild cost never hides in a serving loop).
     """
     eng = get_engine(engine)
     cache = bundle.caches.get(eng.cache_key)
     if cache is None:
+        if eng.needs_cache and eng.cache_key not in _REBUILD_WARNED:
+            _REBUILD_WARNED.add(eng.cache_key)
+            warnings.warn(
+                f"bundle_scores(engine={engine!r}): cache slot "
+                f"{eng.cache_key!r} is not maintained in this bundle "
+                f"(slots: {tuple(bundle.caches)}); rebuilding it on every "
+                "call — include the engine in the bundle's engines= to "
+                "maintain it incrementally (warned once per slot)",
+                RuntimeWarning, stacklevel=2)
         cache = eng.prepare(bundle.cfg, bundle.state)
     return eng.scores(bundle.cfg, cache, x)
 
@@ -125,6 +142,7 @@ def train_step(
     xs: jax.Array,
     ys: jax.Array,
     rng: jax.Array,
+    mask: jax.Array | None = None,
     *,
     parallel: bool = False,
     max_events: int = 4096,
@@ -135,13 +153,20 @@ def train_step(
     or the batch-parallel approximation when ``parallel=True``), then the
     include-mask diff replays into each cache as a fixed-shape masked event
     buffer (≤ ``max_events`` boundary crossings per batch — overflow drops
-    events and is a config error; size it like the seed driver did).
+    events and is a config error: the default suits small minibatches, while
+    full-batch steps need the worst case
+    ``n_classes · n_clauses · n_literals``, cf. the examples).
+
+    ``mask`` (B,) bool marks valid samples: padded rows consume their
+    per-sample randomness but apply no update, so a trailing partial batch
+    can pad to the compiled shape without a recompile and without training
+    on garbage (the ``TsetlinMachine.fit`` padding contract).
     """
     cfg = bundle.cfg
     old_inc = include_mask(cfg, bundle.state)
     update = (tm.update_batch_parallel if parallel
               else tm.update_batch_sequential)
-    new_state = update(cfg, bundle.state, xs, ys, rng)
+    new_state = update(cfg, bundle.state, xs, ys, rng, mask=mask)
     events = indexing.events_from_transition(
         old_inc, include_mask(cfg, new_state), max_events)
     return sync_caches(bundle, new_state, events)
@@ -149,146 +174,36 @@ def train_step(
 
 # Donation updates TA states/caches in place on accelerators; the CPU backend
 # does not implement buffer donation (XLA warns and copies). The decision is
-# made lazily per backend at first call — resolving it at import time would
-# both force backend initialization as an import side effect and freeze the
-# choice before the program can configure its platform.
-_TRAIN_STEP_JIT: dict[str, Any] = {}
+# made lazily per donate flag at first call — resolving it at import time
+# would both force backend initialization as an import side effect and freeze
+# the choice before the program can configure its platform. Keyed by the
+# resolved donate flag so ``Topology(donate=...)`` overrides share the cache.
+_TRAIN_STEP_JIT: dict[bool, Any] = {}
 
 
-def train_step_jit(bundle, xs, ys, rng, *, parallel: bool = False,
-                   max_events: int = 4096):
+def resolve_donate(donate: bool | None) -> bool:
+    """``None`` → donate wherever the backend implements it (not CPU)."""
+    return jax.default_backend() != "cpu" if donate is None else donate
+
+
+def train_step_jit(bundle, xs, ys, rng, mask=None, *, parallel: bool = False,
+                   max_events: int = 4096, donate: bool | None = None):
     """``train_step`` under ``jax.jit``, donating the input bundle on
-    backends that implement donation. NOTE: where donation applies
-    (GPU/TPU), the input bundle's buffers are consumed — do not read it
-    after the call; use the pure ``train_step`` if you need both."""
-    backend = jax.default_backend()
-    fn = _TRAIN_STEP_JIT.get(backend)
+    backends that implement donation (or per the explicit ``donate``
+    override). NOTE: where donation applies (GPU/TPU), the input bundle's
+    buffers are consumed — do not read it after the call; use the pure
+    ``train_step`` if you need both."""
+    donate = resolve_donate(donate)
+    fn = _TRAIN_STEP_JIT.get(donate)
     if fn is None:
         fn = jax.jit(train_step, static_argnames=("parallel", "max_events"),
-                     donate_argnums=(0,) if backend != "cpu" else ())
-        _TRAIN_STEP_JIT[backend] = fn
-    return fn(bundle, xs, ys, rng, parallel=parallel, max_events=max_events)
+                     donate_argnums=(0,) if donate else ())
+        _TRAIN_STEP_JIT[donate] = fn
+    return fn(bundle, xs, ys, rng, mask, parallel=parallel,
+              max_events=max_events)
 
 
-# module-level so the XLA compilation cache is shared across estimator
-# instances (a fresh load_pytree'd machine reuses the compiled graphs)
+# module-level so the XLA compilation cache is shared across sessions and
+# estimator instances (a freshly loaded machine reuses the compiled graphs)
 _scores_jit = jax.jit(bundle_scores, static_argnames=("engine",))
-
-
-class TsetlinMachine:
-    """Estimator facade over the pure bundle functions.
-
-    >>> machine = TsetlinMachine(cfg).init()
-    >>> machine.fit(xs, ys, epochs=3)
-    >>> machine.predict(x_test, engine="indexed")
-
-    Every heavy call delegates to jitted pure functions of the bundle; the
-    facade only owns the bundle reference and the RNG chain.
-    """
-
-    def __init__(
-        self,
-        cfg: TMConfig,
-        *,
-        engines: Iterable[str] | None = None,
-        parallel: bool = False,
-        max_events_per_batch: int = 4096,
-        seed: int = 0,
-    ):
-        self.cfg = cfg
-        self.engines = (tuple(engines) if engines is not None
-                        else registered_engines())
-        self.parallel = parallel
-        self.max_events_per_batch = max_events_per_batch
-        self._key = jax.random.key(seed)
-        self.bundle: TMBundle | None = None
-
-    # -- lifecycle ----------------------------------------------------------
-
-    def init(self, rng: jax.Array | None = None) -> "TsetlinMachine":
-        self.bundle = init_bundle(self.cfg, engines=self.engines, rng=rng)
-        return self
-
-    def _ensure_bundle(self) -> TMBundle:
-        if self.bundle is None:
-            self.init()
-        return self.bundle
-
-    def _next_key(self, rng: jax.Array | None) -> jax.Array:
-        if rng is not None:
-            return rng
-        self._key, sub = jax.random.split(self._key)
-        return sub
-
-    # -- learning -----------------------------------------------------------
-
-    def partial_fit(self, xs, ys, rng: jax.Array | None = None) -> "TsetlinMachine":
-        """One jitted train step over a batch (all engine caches kept in sync)."""
-        bundle = self._ensure_bundle()
-        self.bundle = train_step_jit(
-            bundle, xs, ys, self._next_key(rng),
-            parallel=self.parallel, max_events=self.max_events_per_batch)
-        return self
-
-    def fit(self, xs, ys, *, epochs: int = 1, batch_size: int | None = None,
-            rng: jax.Array | None = None) -> "TsetlinMachine":
-        """Epoch loop of ``partial_fit``; fixed-size minibatches when
-        ``batch_size`` is set (a trailing partial batch is dropped so every
-        step reuses one compiled shape)."""
-        if batch_size is not None and xs.shape[0] < batch_size:
-            raise ValueError(
-                f"batch_size={batch_size} exceeds dataset size "
-                f"{xs.shape[0]}: fit would perform zero steps")
-        key = self._next_key(rng)
-        for _ in range(epochs):
-            if batch_size is None:
-                key, sub = jax.random.split(key)
-                self.partial_fit(xs, ys, sub)
-            else:
-                for start in range(0, xs.shape[0] - batch_size + 1, batch_size):
-                    key, sub = jax.random.split(key)
-                    self.partial_fit(xs[start:start + batch_size],
-                                     ys[start:start + batch_size], sub)
-        return self
-
-    # -- inference ----------------------------------------------------------
-
-    def scores(self, xs, *, engine: str = DEFAULT_ENGINE) -> jax.Array:
-        return _scores_jit(self._ensure_bundle(), xs, engine=engine)
-
-    def predict(self, xs, *, engine: str = DEFAULT_ENGINE) -> jax.Array:
-        return jnp.argmax(self.scores(xs, engine=engine), axis=-1)
-
-    def evaluate(self, xs, ys, *, engine: str = DEFAULT_ENGINE) -> float:
-        return float(jnp.mean(
-            (self.predict(xs, engine=engine) == ys).astype(jnp.float32)))
-
-    # -- state access / persistence -----------------------------------------
-
-    @property
-    def state(self) -> TMState:
-        return self._ensure_bundle().state
-
-    @property
-    def index(self) -> indexing.ClauseIndex:
-        return self._ensure_bundle().index
-
-    def as_pytree(self) -> dict:
-        """Checkpoint payload (same schema as the legacy driver)."""
-        bundle = self._ensure_bundle()
-        idx = bundle.caches.get("indexed")
-        if idx is None:
-            idx = get_engine("indexed").prepare(bundle.cfg, bundle.state)
-        return {"ta_state": bundle.state.ta_state,
-                "lists": idx.lists, "counts": idx.counts, "pos": idx.pos}
-
-    def load_pytree(self, tree: dict) -> "TsetlinMachine":
-        """Restore TA state + index; remaining caches re-prepare from state."""
-        state = TMState(ta_state=tree["ta_state"])
-        restored = indexing.ClauseIndex(
-            lists=tree["lists"], counts=tree["counts"], pos=tree["pos"])
-        caches = {key: (restored if key == "indexed"
-                        else cache_provider(key).prepare(self.cfg, state))
-                  for key in cache_keys_for(self.engines)}
-        self.bundle = TMBundle(cfg=self.cfg, state=state, caches=caches)
-        return self
+_predict_jit = jax.jit(bundle_predict, static_argnames=("engine",))

@@ -44,9 +44,9 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import indexing, tm
-from repro.core.api import DEFAULT_ENGINE, TMBundle, cache_keys_for
-from repro.core.engines import (
-    CLAUSE_AXIS, cache_provider, get_engine, registered_engines)
+from repro.core.api import (
+    DEFAULT_ENGINE, TMBundle, cache_keys_for, resolve_donate)
+from repro.core.engines import CLAUSE_AXIS, cache_provider, get_engine
 from repro.core.types import TMConfig, TMState, clause_polarity, include_mask
 from repro.sharding import shard_map_compat
 
@@ -144,8 +144,8 @@ def make_sharded_scores(cfg: TMConfig, mesh, *, engine: str = DEFAULT_ENGINE):
             raise KeyError(
                 f"engine {engine!r} (cache slot {eng.cache_key!r}) was not "
                 f"prepared in this bundle (slots: {tuple(bundle.caches)}); "
-                "include it in the engines= of make_sharded_prepare/"
-                "ShardedTM — sharded caches cannot be built on the fly")
+                "include it in the engines= of make_sharded_prepare / the "
+                "TMSession — sharded caches cannot be built on the fly")
         return fn(cache, pol, x)
 
     # exposed for the dry-run's HLO assertions (launch/dryrun.py --tm)
@@ -154,28 +154,45 @@ def make_sharded_scores(cfg: TMConfig, mesh, *, engine: str = DEFAULT_ENGINE):
 
 
 def make_sharded_train_step(cfg: TMConfig, mesh, *, engines=None,
-                            parallel: bool = False, max_events: int = 4096):
-    """``(TMBundle, xs, ys, rng) -> TMBundle``, clause-sharded end to end.
+                            parallel: bool = False, max_events: int = 4096,
+                            donate: bool | None = None):
+    """``(TMBundle, xs, ys, rng[, mask]) -> TMBundle``, sharded end to end.
 
-    Sequential mode scans the full batch on every shard (online learning is
-    sequential in samples by definition); the batch-parallel approximation
-    additionally shards the batch over the data/pod axes, psumming the
-    summed TA deltas. Either way the per-class vote psum inside
-    ``tm._class_round`` is the only cross-shard traffic — the include-mask
-    diff and every cache's event replay stay on the shard (``max_events``
-    bounds the *per-shard* event buffer). Bit-exact with the single-device
-    ``api.train_step`` (identical randomness via full-draw slicing).
+    Sequential mode keeps the paper's global sample order (online learning
+    is sequential in samples by definition), so the data/pod axes cannot
+    shard the *batch* — instead they compose with the clause axis
+    **hierarchically**: when the per-shard clause count divides by the
+    data-axis size, each data rank scans the full batch over its own clause
+    *sub-slice* (global clause order = model-major, data-minor), and one
+    final psum over the data axes reassembles the model-shard slice. The
+    vote psum inside ``tm._class_round`` then runs over *all* mesh axes —
+    it already composed; the batch-order question is answered by giving the
+    data axis clause work, not batch work. The batch-parallel approximation
+    shards the batch over data/pod as before, psumming the summed TA
+    deltas. Either way every collective is an all-reduce; the include-mask
+    diff and every cache's event replay stay on the model shard
+    (``max_events`` bounds the *per-shard* event buffer). Bit-exact with
+    the single-device ``api.train_step`` (identical randomness via
+    full-draw slicing).
+
+    ``mask`` (B,) bool marks valid samples (the fixed-shape padding
+    contract of ``api.train_step``); omitted → all rows valid.
     """
     shards = _check_mesh(cfg, mesh)
     n_local = cfg.n_clauses // shards
     keys = cache_keys_for(engines)
     _, cache_specs = bundle_pspecs(cfg, engines)
-    baxes = batch_axes(mesh) if parallel else ()
+    all_baxes = batch_axes(mesh)
+    d_shards = math.prod(mesh.shape[a] for a in all_baxes) if all_baxes else 1
+    # sequential: hierarchical data×clause composition when divisible
+    compose = (not parallel) and d_shards > 1 and n_local % d_shards == 0
+    n_sub = n_local // d_shards if compose else n_local
+    baxes = all_baxes if parallel else ()
     x_spec = P(baxes, None) if baxes else P(None, None)
     y_spec = P(baxes) if baxes else P(None)
     pol = _sharded_polarity(cfg, mesh)
 
-    def local_fn(state_l: TMState, caches_l, pol_l, xs, ys, key_data):
+    def local_fn(state_l: TMState, caches_l, pol_l, xs, ys, key_data, mask):
         rng = jax.random.wrap_key_data(key_data)
         start = jax.lax.axis_index(CLAUSE_AXIS) * n_local
         old_inc = include_mask(cfg, state_l)
@@ -188,61 +205,61 @@ def make_sharded_train_step(cfg: TMConfig, mesh, *, engines=None,
             new_state = tm.update_batch_parallel(
                 cfg, state_l, xs, ys, rng, pol=pol_l, axis_name=CLAUSE_AXIS,
                 clause_start=start, batch_axes=baxes,
-                batch_start=b_idx * xs.shape[0], batch_total=b_total)
+                batch_start=b_idx * xs.shape[0], batch_total=b_total,
+                mask=mask)
+        elif compose:
+            # this data rank owns clause rows [d·n_sub, (d+1)·n_sub) of the
+            # model shard's slice; votes psum over (data axes + clause axis)
+            d_idx = jnp.int32(0)
+            for a in all_baxes:
+                d_idx = d_idx * mesh.shape[a] + jax.lax.axis_index(a)
+            off = d_idx * n_sub
+            sub = TMState(ta_state=jax.lax.dynamic_slice_in_dim(
+                state_l.ta_state, off, n_sub, 1))
+            pol_sub = jax.lax.dynamic_slice_in_dim(pol_l, off, n_sub, 0)
+            new_sub = tm.update_batch_sequential(
+                cfg, sub, xs, ys, rng, pol=pol_sub,
+                axis_name=(*all_baxes, CLAUSE_AXIS),
+                clause_start=start + off, mask=mask)
+            # reassemble the model shard's slice: each row is owned by
+            # exactly one data rank, so a zero-padded psum is a gather
+            # expressed as the one collective kind this step allows
+            assembled = jax.lax.dynamic_update_slice_in_dim(
+                jnp.zeros_like(state_l.ta_state), new_sub.ta_state, off, 1)
+            new_state = TMState(
+                ta_state=jax.lax.psum(assembled, all_baxes))
         else:
             new_state = tm.update_batch_sequential(
                 cfg, state_l, xs, ys, rng, pol=pol_l, axis_name=CLAUSE_AXIS,
-                clause_start=start)
+                clause_start=start, mask=mask)
         events = indexing.events_from_transition(
             old_inc, include_mask(cfg, new_state), max_events)
         new_caches = {k: cache_provider(k).update_cache(
                           cfg, caches_l[k], new_state, events) for k in keys}
         return new_state, new_caches
 
+    mask_spec = y_spec  # batch-sharded in parallel mode, replicated otherwise
     sm = shard_map_compat(
         local_fn, mesh=mesh,
         in_specs=(STATE_PSPEC, cache_specs, P(CLAUSE_AXIS), x_spec, y_spec,
-                  P(None)),
+                  P(None), mask_spec),
         out_specs=(STATE_PSPEC, cache_specs))
-    donate = (0, 1) if jax.default_backend() != "cpu" else ()
-    fn = jax.jit(sm, donate_argnums=donate)
+    donate_nums = (0, 1) if resolve_donate(donate) else ()
+    fn = jax.jit(sm, donate_argnums=donate_nums)
 
-    def step(bundle: TMBundle, xs, ys, rng) -> TMBundle:
+    def step(bundle: TMBundle, xs, ys, rng, mask=None) -> TMBundle:
+        if mask is None:
+            mask = jnp.ones(xs.shape[0], bool)
         new_state, new_caches = fn(bundle.state, bundle.caches, pol, xs, ys,
-                                   jax.random.key_data(rng))
+                                   jax.random.key_data(rng), mask)
         return TMBundle(cfg=cfg, state=new_state, caches=new_caches)
 
     # exposed for the dry-run's HLO assertions (launch/dryrun.py --tm)
-    step.jitted, step.pol = fn, pol
+    step.jitted, step.pol, step.composes_data_axis = fn, pol, compose
     return step
 
 
-class ShardedTM:
-    """One (cfg, mesh) worth of sharded prepare / scores / train_step.
-
-    The distributed counterpart of the ``TsetlinMachine`` facade: factories
-    are built once (compilation caches per engine), the bundle flows through
-    pure functions exactly like the single-device API.
-    """
-
-    def __init__(self, cfg: TMConfig, mesh, *, engines=None,
-                 parallel: bool = False, max_events: int = 4096):
-        self.cfg = cfg
-        self.mesh = mesh
-        self.engines = (tuple(engines) if engines is not None
-                        else registered_engines())
-        self.prepare = make_sharded_prepare(cfg, mesh, engines=self.engines)
-        self.train_step = make_sharded_train_step(
-            cfg, mesh, engines=self.engines, parallel=parallel,
-            max_events=max_events)
-        self._scores: dict[str, object] = {}
-
-    def scores(self, bundle: TMBundle, x, *, engine: str = DEFAULT_ENGINE):
-        fn = self._scores.get(engine)
-        if fn is None:
-            fn = make_sharded_scores(self.cfg, self.mesh, engine=engine)
-            self._scores[engine] = fn
-        return fn(bundle, x)
-
-    def predict(self, bundle: TMBundle, x, *, engine: str = DEFAULT_ENGINE):
-        return jnp.argmax(self.scores(bundle, x, engine=engine), axis=-1)
+# The stateful facade over these factories is ``core/session.py``'s
+# ``TMSession`` (``ShardedTM`` in PR 2): one session resolves a ``Topology``
+# into either this shard_map path or the single-device jitted path, so
+# callers never wire prepare/scores/train_step by hand.

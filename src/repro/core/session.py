@@ -1,0 +1,391 @@
+"""Topology-aware TM execution: one estimator surface for every placement.
+
+The clause-indexing paper's engines are placement-agnostic by construction
+(DESIGN.md §6: the sharded unit is the whole ``TMBundle``); what was missing
+was a single front door. This module is that door:
+
+  * ``Topology`` — a declarative placement spec: how many clause shards
+    (the Massively Parallel TM partitioning axis), how many data shards
+    (batch axis for inference / batch-parallel learning; extra clause
+    parallelism for sequential learning — see ``distributed.py``), which
+    engines to maintain, and whether train steps donate their input bundle.
+  * ``TMSession`` — resolves a ``Topology`` **once** into either the
+    single-device jitted path (``api.train_step_jit`` / ``api._scores_jit``)
+    or the shard_map path (``distributed.make_sharded_*`` over a host mesh),
+    and exposes placement-transparent ``prepare`` / ``train_step`` /
+    ``scores`` / ``predict``. Both resolutions are bit-exact for the same
+    seed (full-draw rand slicing), so a topology is a deployment detail —
+    the property tests/test_tm_session.py pins.
+  * ``TsetlinMachine`` — the stateful estimator facade over a session
+    (init / fit / partial_fit / predict / scores / evaluate, plus the
+    versioned ``save`` / ``load`` checkpoint API). ``fit`` pads a trailing
+    partial batch to the compiled shape with a sample mask — no recompile,
+    no dropped samples.
+
+Serving (``launch/tm_serve.py``) and fault-tolerant training
+(``runtime/tm_task.py``) drive the same session object; checkpoints persist
+state + config fingerprint only (``checkpoint/tm_store.py``) and rebuild
+caches on the restoring session's topology (reshard-on-restore).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.core import api, indexing
+from repro.core.api import (
+    DEFAULT_ENGINE, TMBundle, init_bundle, train_step_jit)
+from repro.core.engines import CLAUSE_AXIS, registered_engines
+from repro.core.types import TMConfig, TMState, init_tm
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Declarative placement for a TM: resolved once by ``TMSession``.
+
+    ``clause_shards``  — ways the clause axis splits over the mesh ``model``
+                         axis (1 → no clause sharding).
+    ``data_shards``    — ways the batch splits over the mesh ``data`` axis
+                         for inference and batch-parallel learning; for
+                         sequential learning the data axis instead composes
+                         with the clause axis (hierarchical data×clause
+                         sharding, ``distributed.make_sharded_train_step``).
+    ``engines``        — engine names whose caches the bundle maintains
+                         (None → every registered engine).
+    ``donate``         — train steps donate the input bundle's buffers
+                         (None → wherever the backend implements donation).
+    """
+
+    clause_shards: int = 1
+    data_shards: int = 1
+    engines: tuple[str, ...] | None = None
+    donate: bool | None = None
+
+    def __post_init__(self):
+        if self.clause_shards < 1 or self.data_shards < 1:
+            raise ValueError(
+                f"Topology shard counts must be >= 1, got clause_shards="
+                f"{self.clause_shards}, data_shards={self.data_shards}")
+        if self.engines is not None and not isinstance(self.engines, tuple):
+            object.__setattr__(self, "engines", tuple(self.engines))
+
+    @property
+    def n_devices(self) -> int:
+        return self.clause_shards * self.data_shards
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.n_devices > 1
+
+    def describe(self) -> dict:
+        return {"clause_shards": self.clause_shards,
+                "data_shards": self.data_shards,
+                "devices": self.n_devices}
+
+
+def _topology_of_mesh(mesh, engines, donate) -> Topology:
+    """Derive the Topology an explicit mesh implements."""
+    clause = mesh.shape.get(CLAUSE_AXIS, 1)
+    data = 1
+    for a in ("pod", "data"):
+        data *= mesh.shape.get(a, 1)
+    return Topology(clause_shards=clause, data_shards=data,
+                    engines=engines, donate=donate)
+
+
+class TMSession:
+    """One resolved (config × topology): placement-transparent execution.
+
+    Resolution happens once, here: a 1-device topology binds the jitted
+    single-device functions; anything larger builds (or adopts) a mesh and
+    binds the shard_map factories. Every method downstream —
+    ``prepare`` / ``train_step`` / ``scores`` / ``predict`` — has identical
+    semantics and bit-exact results across resolutions.
+
+    Pass ``mesh=`` to adopt an existing mesh (the trainer's, a production
+    pod slice) instead of building a host mesh from the shard counts.
+    """
+
+    def __init__(self, cfg: TMConfig, topology: Topology | None = None, *,
+                 mesh=None, engines: Iterable[str] | None = None,
+                 parallel: bool = False, max_events: int = 4096):
+        if topology is None:
+            topology = Topology(
+                engines=tuple(engines) if engines is not None else None)
+        elif engines is not None:
+            if (topology.engines is not None
+                    and topology.engines != tuple(engines)):
+                raise ValueError(
+                    f"conflicting engines: topology says {topology.engines}, "
+                    f"call says {tuple(engines)}")
+            topology = dataclasses.replace(topology, engines=tuple(engines))
+        if mesh is not None:
+            topology = _topology_of_mesh(mesh, topology.engines,
+                                         topology.donate)
+        self.cfg = cfg
+        self.topology = topology
+        self.parallel = parallel
+        self.max_events = max_events
+        self.engines = (topology.engines if topology.engines is not None
+                        else registered_engines())
+        self._scores_fns: dict[str, object] = {}
+
+        if not topology.is_sharded:
+            self.mesh = None
+            self._prepare = None
+            self._step = None
+            return
+
+        from repro.core import distributed  # sharded resolution only
+        if mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            try:
+                mesh = make_host_mesh(data=topology.data_shards,
+                                      model=topology.clause_shards)
+            except RuntimeError as e:
+                raise RuntimeError(
+                    f"Topology(clause_shards={topology.clause_shards}, "
+                    f"data_shards={topology.data_shards}) needs "
+                    f"{topology.n_devices} devices: {e}") from None
+        self.mesh = mesh
+        self._prepare = distributed.make_sharded_prepare(
+            cfg, mesh, engines=self.engines)
+        self._step = distributed.make_sharded_train_step(
+            cfg, mesh, engines=self.engines, parallel=parallel,
+            max_events=max_events, donate=topology.donate)
+
+    # -- placement ----------------------------------------------------------
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.mesh is not None
+
+    def state_sharding(self):
+        """Target sharding of ``ta_state`` under this session (None = any)."""
+        if self.mesh is None:
+            return None
+        from repro.core.distributed import STATE_PSPEC
+        return NamedSharding(self.mesh, STATE_PSPEC.ta_state)
+
+    def describe(self) -> dict:
+        d = self.topology.describe()
+        d["sharded"] = self.is_sharded
+        return d
+
+    # -- bundle lifecycle ---------------------------------------------------
+
+    def prepare(self, state: TMState) -> TMBundle:
+        """Bundle with this session's caches built from ``state`` (placed
+        per the topology; sharded caches are built shard-locally)."""
+        if self._prepare is not None:
+            return self._prepare(state)
+        return init_bundle(self.cfg, engines=self.engines, state=state)
+
+    def init_bundle(self, rng: jax.Array | None = None) -> TMBundle:
+        return self.prepare(init_tm(self.cfg, rng))
+
+    # -- execution ----------------------------------------------------------
+
+    def train_step(self, bundle: TMBundle, xs, ys, rng,
+                   mask=None) -> TMBundle:
+        """One learning step (all maintained caches stay in sync). The
+        input bundle is donated when the topology says so — do not read it
+        afterwards."""
+        if self._step is not None:
+            d = self.topology.data_shards
+            if self.parallel and xs.shape[0] % d:
+                raise ValueError(
+                    f"batch size {xs.shape[0]} does not divide over "
+                    f"data_shards={d} (batch-parallel learning shards the "
+                    "batch); pick a divisible batch_size")
+            return self._step(bundle, xs, ys, rng, mask)
+        return train_step_jit(bundle, xs, ys, rng, mask,
+                              parallel=self.parallel,
+                              max_events=self.max_events,
+                              donate=self.topology.donate)
+
+    def scores(self, bundle: TMBundle, x, *,
+               engine: str = DEFAULT_ENGINE) -> jax.Array:
+        if self.mesh is None:
+            return api._scores_jit(bundle, x, engine=engine)
+        fn = self._scores_fns.get(engine)
+        if fn is None:
+            from repro.core.distributed import make_sharded_scores
+            fn = make_sharded_scores(self.cfg, self.mesh, engine=engine)
+            self._scores_fns[engine] = fn
+        return fn(bundle, x)
+
+    def predict(self, bundle: TMBundle, x, *,
+                engine: str = DEFAULT_ENGINE) -> jax.Array:
+        if self.mesh is None:
+            return api._predict_jit(bundle, x, engine=engine)
+        return jnp.argmax(self.scores(bundle, x, engine=engine), axis=-1)
+
+    # -- checkpointing (schema v1: state + config fingerprint) --------------
+
+    def save(self, directory, bundle: TMBundle, *, step: int = 0,
+             keep: int = 3, blocking: bool = True) -> None:
+        from repro.checkpoint import tm_store
+        tm_store.save_tm(directory, self.cfg, bundle.state.ta_state,
+                         step=step, keep=keep, blocking=blocking)
+
+    def restore(self, directory, *, step: int | None = None):
+        """(bundle, step) from a schema-v1 checkpoint: the TA state lands on
+        this session's placement and every cache rebuilds on this topology
+        (reshard-on-restore — caches are never persisted)."""
+        from repro.checkpoint import tm_store
+        like = jax.ShapeDtypeStruct(
+            (self.cfg.n_classes, self.cfg.n_clauses, self.cfg.n_literals),
+            self.cfg.state_dtype)
+        ta, step = tm_store.load_tm(directory, self.cfg, like, step=step,
+                                    sharding=self.state_sharding())
+        return self.prepare(TMState(ta_state=ta)), step
+
+
+class TsetlinMachine:
+    """Estimator facade over a ``TMSession``.
+
+    >>> machine = TsetlinMachine(cfg, topology=Topology(clause_shards=4))
+    >>> machine.init().fit(xs, ys, epochs=3, batch_size=128)
+    >>> machine.predict(x_test, engine="indexed")
+
+    The topology is transparent: the same script runs single-device, clause
+    sharded, or data×clause sharded, bit-exactly. Every heavy call delegates
+    to the session's jitted pure functions; the facade only owns the bundle
+    reference and the RNG chain.
+    """
+
+    def __init__(
+        self,
+        cfg: TMConfig,
+        *,
+        topology: Topology | None = None,
+        engines: Iterable[str] | None = None,
+        parallel: bool = False,
+        max_events_per_batch: int = 4096,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.session = TMSession(cfg, topology, engines=engines,
+                                 parallel=parallel,
+                                 max_events=max_events_per_batch)
+        self.engines = self.session.engines
+        self.parallel = parallel
+        self.max_events_per_batch = max_events_per_batch
+        self._key = jax.random.key(seed)
+        self.bundle: TMBundle | None = None
+
+    @property
+    def topology(self) -> Topology:
+        return self.session.topology
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def init(self, rng: jax.Array | None = None) -> "TsetlinMachine":
+        self.bundle = self.session.init_bundle(rng)
+        return self
+
+    def _ensure_bundle(self) -> TMBundle:
+        if self.bundle is None:
+            self.init()
+        return self.bundle
+
+    def _next_key(self, rng: jax.Array | None) -> jax.Array:
+        if rng is not None:
+            return rng
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- learning -----------------------------------------------------------
+
+    def partial_fit(self, xs, ys, rng: jax.Array | None = None, *,
+                    mask=None) -> "TsetlinMachine":
+        """One train step over a batch (all maintained caches kept in sync).
+        ``mask`` (B,) bool marks valid rows — padded rows apply no update."""
+        bundle = self._ensure_bundle()
+        self.bundle = self.session.train_step(
+            bundle, xs, ys, self._next_key(rng), mask)
+        return self
+
+    def fit(self, xs, ys, *, epochs: int = 1, batch_size: int | None = None,
+            rng: jax.Array | None = None) -> "TsetlinMachine":
+        """Epoch loop of ``partial_fit``; fixed-size minibatches when
+        ``batch_size`` is set. A trailing partial batch pads to the compiled
+        shape with a sample mask — every step reuses one compiled graph and
+        every sample trains (padded rows are masked out)."""
+        n = int(xs.shape[0])
+        if batch_size is not None and n < batch_size:
+            raise ValueError(
+                f"batch_size={batch_size} exceeds dataset size "
+                f"{n}: fit would perform zero steps")
+        key = self._next_key(rng)
+        for _ in range(epochs):
+            if batch_size is None:
+                key, sub = jax.random.split(key)
+                self.partial_fit(xs, ys, sub)
+                continue
+            for start in range(0, n, batch_size):
+                key, sub = jax.random.split(key)
+                k = min(batch_size, n - start)
+                xb, yb = xs[start:start + k], ys[start:start + k]
+                mask = None  # full batches skip the masking work entirely
+                if k < batch_size:  # pad to the compiled shape, mask the rest
+                    pad = batch_size - k
+                    xb = jnp.concatenate(
+                        [jnp.asarray(xb),
+                         jnp.zeros((pad,) + tuple(xs.shape[1:]),
+                                   jnp.asarray(xb).dtype)])
+                    yb = jnp.concatenate(
+                        [jnp.asarray(yb),
+                         jnp.zeros((pad,), jnp.asarray(yb).dtype)])
+                    mask = jnp.arange(batch_size) < k
+                self.partial_fit(xb, yb, sub, mask=mask)
+        return self
+
+    # -- inference ----------------------------------------------------------
+
+    def scores(self, xs, *, engine: str = DEFAULT_ENGINE) -> jax.Array:
+        return self.session.scores(self._ensure_bundle(), xs, engine=engine)
+
+    def predict(self, xs, *, engine: str = DEFAULT_ENGINE) -> jax.Array:
+        return self.session.predict(self._ensure_bundle(), xs, engine=engine)
+
+    def evaluate(self, xs, ys, *, engine: str = DEFAULT_ENGINE) -> float:
+        return float(jnp.mean(
+            (self.predict(xs, engine=engine) == ys).astype(jnp.float32)))
+
+    # -- state access / persistence -----------------------------------------
+
+    @property
+    def state(self) -> TMState:
+        return self._ensure_bundle().state
+
+    @property
+    def index(self) -> indexing.ClauseIndex:
+        """The paper's clause index (shard-local layout when sharded)."""
+        return self._ensure_bundle().index
+
+    def save(self, directory, *, step: int = 0, keep: int = 3,
+             blocking: bool = True) -> "TsetlinMachine":
+        """Versioned checkpoint (schema v1): TA state + config fingerprint
+        only. Engine caches are derived data and never persist — ``load``
+        rebuilds them on the loading machine's topology."""
+        self.session.save(directory, self._ensure_bundle(), step=step,
+                          keep=keep, blocking=blocking)
+        return self
+
+    @classmethod
+    def load(cls, directory, cfg: TMConfig, *,
+             topology: Topology | None = None, step: int | None = None,
+             **kwargs) -> "TsetlinMachine":
+        """Restore onto any topology: the checkpointed state reshards to the
+        new placement and caches rebuild there. Raises
+        ``checkpoint.CheckpointMismatch`` when ``cfg`` does not fingerprint-
+        match the checkpoint."""
+        machine = cls(cfg, topology=topology, **kwargs)
+        machine.bundle, _ = machine.session.restore(directory, step=step)
+        return machine

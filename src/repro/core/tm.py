@@ -198,7 +198,10 @@ def _class_round(
     positive_round: jax.Array,  # scalar bool — True: target-class round
     *,
     pol: jax.Array | None = None,   # (n,) ±1 — pass the local slice when sharded
-    axis_name: str | None = None,   # mesh clause axis: votes psum over shards
+    # mesh axes the votes psum over: the clause axis, or (batch axes + clause
+    # axis) when the sequential path additionally splits clauses over the
+    # data axes (hierarchical data×clause sharding)
+    axis_name: str | tuple[str, ...] | None = None,
 ) -> jax.Array:
     """One feedback round for one class; returns updated (n, 2o) states.
 
@@ -244,7 +247,7 @@ def update_sample(
     rng: jax.Array,
     *,
     pol: jax.Array | None = None,
-    axis_name: str | None = None,
+    axis_name: str | tuple[str, ...] | None = None,
     clause_start: jax.Array | None = None,
 ) -> TMState:
     """One online update (the paper's per-sample learning).
@@ -284,23 +287,30 @@ def update_batch_sequential(
     cfg: TMConfig, state: TMState, xs: jax.Array, ys: jax.Array,
     rng: jax.Array, *,
     pol: jax.Array | None = None,
-    axis_name: str | None = None,
+    axis_name: str | tuple[str, ...] | None = None,
     clause_start: jax.Array | None = None,
+    mask: jax.Array | None = None,
 ) -> TMState:
     """Faithful online learning over a batch: lax.scan of per-sample updates.
 
     Sharded mode (kwargs set): the *full* batch is scanned on every clause
     shard — online learning is sequential in samples by definition — with one
     vote psum per class round as the only collective.
+
+    ``mask`` (B,) bool marks valid samples: masked-out rows consume their
+    randomness (so padded and unpadded streams stay key-aligned) but apply no
+    state update — the padding contract for fixed-shape trailing batches.
     """
     keys = jax.random.split(rng, xs.shape[0])
 
     def body(st, inp):
-        x, y, k = inp
-        return update_sample(cfg, st, x, y, k, pol=pol, axis_name=axis_name,
-                             clause_start=clause_start), None
+        x, y, k, m = inp
+        new = update_sample(cfg, st, x, y, k, pol=pol, axis_name=axis_name,
+                            clause_start=clause_start)
+        return TMState(ta_state=jnp.where(m, new.ta_state, st.ta_state)), None
 
-    out, _ = jax.lax.scan(body, state, (xs, ys, keys))
+    valid = jnp.ones(xs.shape[0], bool) if mask is None else mask
+    out, _ = jax.lax.scan(body, state, (xs, ys, keys, valid))
     return out
 
 
@@ -308,11 +318,12 @@ def update_batch_parallel(
     cfg: TMConfig, state: TMState, xs: jax.Array, ys: jax.Array,
     rng: jax.Array, *,
     pol: jax.Array | None = None,
-    axis_name: str | None = None,
+    axis_name: str | tuple[str, ...] | None = None,
     clause_start: jax.Array | None = None,
     batch_axes: tuple[str, ...] = (),
     batch_start: jax.Array | None = None,
     batch_total: int | None = None,
+    mask: jax.Array | None = None,
 ) -> TMState:
     """Beyond-paper: batch-parallel update (deltas computed vs the *same*
     pre-batch state, then summed). An approximation of online learning —
@@ -322,7 +333,8 @@ def update_batch_parallel(
     shard's slice of a ``batch_total``-sized global batch starting at
     ``batch_start``; per-sample keys are the global split sliced to match
     (bit-exact with the single-device split), and the summed deltas are
-    psum'd over ``batch_axes`` before the clip.
+    psum'd over ``batch_axes`` before the clip. ``mask`` (B,) bool zeroes
+    the deltas of padded samples (randomness still consumed per row).
     """
     if batch_total is None:
         keys = jax.random.split(rng, xs.shape[0])
@@ -337,7 +349,10 @@ def update_batch_parallel(
                             clause_start=clause_start)
         return (new.ta_state.astype(jnp.int32) - state.ta_state.astype(jnp.int32))
 
-    deltas = jax.vmap(one)(xs, ys, keys).sum(axis=0)
+    deltas = jax.vmap(one)(xs, ys, keys)
+    if mask is not None:
+        deltas = jnp.where(mask[:, None, None, None], deltas, 0)
+    deltas = deltas.sum(axis=0)
     if batch_axes:
         deltas = jax.lax.psum(deltas, batch_axes)
     ta = jnp.clip(

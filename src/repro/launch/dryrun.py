@@ -141,14 +141,20 @@ def run_tm_checks(*, data: int = 2, model: int = 4, batch: int = 16,
                                        max_events=1024)
         txs = jnp.zeros((train_batch, cfg.n_features), jnp.uint8)
         tys = jnp.zeros((train_batch,), jnp.int32)
+        tmask = jnp.ones((train_batch,), bool)
         kd = jax.random.key_data(jax.random.key(0))
         compiled = step.jitted.lower(bundle.state, bundle.caches, step.pol,
-                                     txs, tys, kd).compile()
+                                     txs, tys, kd, tmask).compile()
         coll = hlo_mod.collective_stats(compiled.as_text())
+        # sequential composes data×clause here (data axis > 1, divisible):
+        # its clause-slice reassembly psum is an all-reduce too — the
+        # contract stays "all-reduce only", never a gather of state/caches
         ok = set(coll.by_kind) <= {"all-reduce"}
         key = f"train_step_{'parallel' if parallel else 'sequential'}"
         record[key] = {"collective_count": coll.count,
-                       "by_kind": coll.by_kind, "all_reduce_only": ok}
+                       "by_kind": coll.by_kind, "all_reduce_only": ok,
+                       "composes_data_axis": bool(
+                           getattr(step, "composes_data_axis", False))}
         print(f"[tm] {key}: collectives={coll.by_kind} count={coll.count} "
               f"{'OK' if ok else 'FAIL'}", flush=True)
         if not ok:

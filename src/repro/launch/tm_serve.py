@@ -1,28 +1,39 @@
-"""Batched TM serving: pad/bucket incoming requests, run a registry engine,
-report tail latency + throughput.
+"""Batched TM serving through a ``TMSession``: pad/bucket incoming requests,
+run a registry engine on any topology, report tail latency + throughput.
 
     PYTHONPATH=src python -m repro.launch.tm_serve --smoke
     PYTHONPATH=src python -m repro.launch.tm_serve \
         --engine indexed,bitpack_xla --requests 2048 --rps 4000
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.tm_serve --data-shards 4
 
 The serving loop is the TM analogue of ``launch/serve.py``'s LM loop, built
-on the PR-1 bundle API: one ``TMBundle`` carries the maintained cache of
-whichever engine serves, and inference is a single jitted ``bundle_scores``
-call per batch.
+on the session API (core/session.py): one ``TMBundle`` carries the
+maintained cache of whichever engine serves, and inference is a single
+jitted ``session.scores`` call per batch — the single-device graph on a
+1-device topology, the clause-sharded ``make_sharded_scores`` shard_map
+path (one (B, m) vote all-reduce; batch sharded over the ``data`` axis
+communication-free) on a multi-device mesh. The serve loop itself never
+branches on placement.
 
 Batching policy (DESIGN.md §6): requests queue with their arrival time;
 when the server frees up it takes everything queued (capped at
 ``max_batch``); when idle it admits the next arrival and holds a
 ``max_wait_ms`` window to accumulate a batch. Batches pad to power-of-two
 buckets so every shape compiles exactly once (compile time is measured
-separately up front, never inside the latency loop). The loop runs on a
-simulated arrival clock advanced by *measured* compute times, so the
-percentiles are real compute under a synthetic load — deterministic per
-seed, no sleeps.
+separately up front, never inside the latency loop); on a data-sharded
+topology the smallest bucket is the data-shard count so every batch
+divides over the mesh. The loop runs on a simulated arrival clock advanced
+by *measured* compute times, so the percentiles are real compute under a
+synthetic load — deterministic per seed, no sleeps.
 
 Emits ``BENCH_tm_serve.json`` (gitignored scratch, like ``BENCH_tm.json``)
-with per-engine latency percentiles, throughput, and padding efficiency —
-the CI smoke (scripts/ci.sh) asserts the file is well-formed.
+with per-engine latency percentiles, throughput, padding efficiency, the
+serving topology, and — when more than one device is available — a
+``batch_axis_scaling`` sweep: the same load served at 1, 2, … data shards,
+so batch-axis scaling is visible per device count. The CI smoke
+(scripts/ci.sh) runs under a forced 4-device host platform and asserts the
+device count and the sweep are recorded.
 """
 from __future__ import annotations
 
@@ -36,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import TMConfig, TMState, registered_engines
-from repro.core.api import bundle_scores, init_bundle
+from repro.core.session import TMSession, Topology
 from repro.data.synthetic import binarized_images
 
 
@@ -46,11 +57,27 @@ class ServePolicy:
     max_wait_ms: float = 2.0  # batching window when the queue is empty
 
 
-def buckets(max_batch: int) -> list[int]:
-    """Power-of-two padding buckets up to (and including) max_batch."""
-    out = [1]
+def buckets(max_batch: int, min_batch: int = 1) -> list[int]:
+    """Power-of-two padding buckets in [min_batch, max_batch].
+
+    ``min_batch`` is the serving topology's data-shard count: every padded
+    batch must divide over the mesh ``data`` axis, so a top bucket that is
+    not a multiple of ``min_batch`` rounds *down* to one (the serve loop
+    caps admission at the top bucket).
+    """
+    if min_batch > max_batch:
+        raise ValueError(
+            f"max_batch={max_batch} < data shards={min_batch}: every "
+            "batch must divide over the data axis — raise max_batch or "
+            "serve with fewer data shards")
+    out = [min_batch]
     while out[-1] < max_batch:
-        out.append(min(out[-1] * 2, max_batch))
+        nxt = min(out[-1] * 2, max_batch)
+        if nxt % min_batch:
+            nxt = max(min_batch, (nxt // min_batch) * min_batch)
+            if nxt == out[-1]:
+                break
+        out.append(nxt)
     return out
 
 
@@ -61,20 +88,30 @@ def _bucket_for(n: int, sizes: list[int]) -> int:
     return sizes[-1]
 
 
-_scores_jit = jax.jit(bundle_scores, static_argnames=("engine",))
+def _random_state(cfg: TMConfig, rng: np.random.Generator,
+                  include_density: float) -> TMState:
+    """Random sparse include state — serving benchmarks measure evaluation,
+    not training quality."""
+    inc = rng.uniform(size=(cfg.n_classes, cfg.n_clauses,
+                            cfg.n_literals)) < include_density
+    return TMState(ta_state=jnp.asarray(
+        np.where(inc, cfg.n_states + 1, cfg.n_states), jnp.int16))
 
 
-def serve_engine(bundle, x_all: np.ndarray, arrivals: np.ndarray, *,
-                 engine: str, policy: ServePolicy) -> dict:
+def serve_engine(session: TMSession, bundle, x_all: np.ndarray,
+                 arrivals: np.ndarray, *, engine: str,
+                 policy: ServePolicy) -> dict:
     """Run the batched loop for one engine; returns its stats record."""
-    sizes = buckets(policy.max_batch)
+    sizes = buckets(policy.max_batch,
+                    min_batch=session.topology.data_shards)
     o = x_all.shape[1]
 
     compile_s = {}
     for b in sizes:  # compile every bucket before the timed loop
         t0 = time.perf_counter()
         jax.block_until_ready(
-            _scores_jit(bundle, jnp.zeros((b, o), jnp.uint8), engine=engine))
+            session.scores(bundle, jnp.zeros((b, o), jnp.uint8),
+                           engine=engine))
         compile_s[b] = round(time.perf_counter() - t0, 4)
 
     n = x_all.shape[0]
@@ -83,18 +120,18 @@ def serve_engine(bundle, x_all: np.ndarray, arrivals: np.ndarray, *,
     i = 0
     lat: list[float] = []
     rows_real = rows_padded = n_batches = 0
+    cap = sizes[-1]  # top bucket (≤ max_batch, multiple of the data shards)
     while i < n:
         if arrivals[i] > clock:               # idle: admit next + hold window
             clock = float(arrivals[i]) + wait
-        k = int(np.searchsorted(arrivals[i:i + policy.max_batch], clock,
-                                side="right"))
+        k = int(np.searchsorted(arrivals[i:i + cap], clock, side="right"))
         k = max(k, 1)
         b = _bucket_for(k, sizes)
         xp = np.zeros((b, o), np.uint8)
         xp[:k] = x_all[i:i + k]
         t0 = time.perf_counter()
-        jax.block_until_ready(_scores_jit(bundle, jnp.asarray(xp),
-                                          engine=engine))
+        jax.block_until_ready(
+            session.scores(bundle, jnp.asarray(xp), engine=engine))
         done = clock + (time.perf_counter() - t0)
         lat.extend(done - arrivals[i:i + k])
         rows_real += k
@@ -130,21 +167,14 @@ def serve_engine(bundle, x_all: np.ndarray, arrivals: np.ndarray, *,
     }
 
 
-def run(cfg: TMConfig, *, engines=("indexed",), n_requests: int = 512,
-        rps: float = 2000.0, policy: ServePolicy = ServePolicy(),
-        seed: int = 0, include_density: float = 0.08) -> dict:
-    """Serve a synthetic load through each engine; returns the JSON record.
-
-    The model is a random sparse include state (serving benchmarks measure
-    evaluation, not training quality); each requested engine's cache is
-    prepared once into the bundle and maintained from then on.
-    """
+def run(cfg: TMConfig, *, engines=("indexed",), topology: Topology | None = None,
+        n_requests: int = 512, rps: float = 2000.0,
+        policy: ServePolicy = ServePolicy(), seed: int = 0,
+        include_density: float = 0.08) -> dict:
+    """Serve a synthetic load through each engine on one topology."""
     rng = np.random.default_rng(seed)
-    inc = rng.uniform(size=(cfg.n_classes, cfg.n_clauses,
-                            cfg.n_literals)) < include_density
-    state = TMState(ta_state=jnp.asarray(
-        np.where(inc, cfg.n_states + 1, cfg.n_states), jnp.int16))
-    bundle = init_bundle(cfg, engines=engines, state=state)
+    session = TMSession(cfg, topology, engines=engines)
+    bundle = session.prepare(_random_state(cfg, rng, include_density))
 
     x_all, _ = binarized_images(n_requests, cfg.n_features, cfg.n_classes,
                                 seed=seed + 1)
@@ -156,12 +186,50 @@ def run(cfg: TMConfig, *, engines=("indexed",), n_requests: int = 512,
         "load": {"requests": n_requests, "rps": rps},
         "policy": {"max_batch": policy.max_batch,
                    "max_wait_ms": policy.max_wait_ms},
+        "devices": jax.local_device_count(),
+        "topology": session.describe(),
         "engines": {},
     }
     for engine in engines:
         record["engines"][engine] = serve_engine(
-            bundle, x_all, arrivals, engine=engine, policy=policy)
+            session, bundle, x_all, arrivals, engine=engine, policy=policy)
     return record
+
+
+def run_batch_axis_scaling(cfg: TMConfig, *, engine: str = "indexed",
+                           device_counts=None, n_requests: int = 256,
+                           rps: float = 2000.0,
+                           policy: ServePolicy = ServePolicy(),
+                           seed: int = 0, include_density: float = 0.08,
+                           reuse: dict | None = None) -> list[dict]:
+    """The same load at 1, 2, … data shards: batch-axis scaling per device
+    count (the scores path is communication-free over ``data``, so this is
+    the ROADMAP's multi-device ``tm_serve`` measurement).
+
+    ``reuse`` maps a device count to an already-measured ``serve_engine``
+    record for the identical load (e.g. the caller's main record), so that
+    count is not benchmarked twice.
+    """
+    if device_counts is None:
+        device_counts, d = [], 1
+        while d <= min(jax.local_device_count(), policy.max_batch):
+            device_counts.append(d)
+            d *= 2
+    out = []
+    for d in device_counts:
+        r = (reuse or {}).get(d)
+        if r is None:
+            rec = run(cfg, engines=(engine,),
+                      topology=Topology(data_shards=d),
+                      n_requests=n_requests, rps=rps, policy=policy,
+                      seed=seed, include_density=include_density)
+            r = rec["engines"][engine]
+        out.append({"devices": d, "data_shards": d, "engine": engine,
+                    "throughput_rps": r["throughput_rps"],
+                    "p50_ms": r["latency_ms"]["p50"],
+                    "p95_ms": r["latency_ms"]["p95"],
+                    "saturated": r["saturated"]})
+    return out
 
 
 def main() -> None:
@@ -175,12 +243,19 @@ def main() -> None:
     ap.add_argument("--classes", type=int, default=10)
     ap.add_argument("--clauses", type=int, default=256)
     ap.add_argument("--features", type=int, default=196)
+    ap.add_argument("--data-shards", type=int, default=None,
+                    help="serve data-sharded over this many devices "
+                         "(default: all available)")
+    ap.add_argument("--clause-shards", type=int, default=1)
+    ap.add_argument("--no-scaling", action="store_true",
+                    help="skip the per-device-count batch-axis sweep")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_tm_serve.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny load for CI (scripts/ci.sh)")
     args = ap.parse_args()
 
+    n_dev = jax.local_device_count()
     if args.smoke:
         cfg = TMConfig(n_classes=4, n_clauses=64, n_features=48)
         engines = ("indexed", "bitpack_xla")
@@ -195,12 +270,34 @@ def main() -> None:
             raise SystemExit(f"unknown engine {e!r}; "
                              f"registered: {registered_engines()}")
 
-    record = run(cfg, engines=engines, n_requests=n_requests, rps=args.rps,
-                 policy=ServePolicy(max_batch=max_batch,
-                                    max_wait_ms=args.max_wait_ms),
+    # default placement: spread spare devices over data, but never beyond
+    # max_batch (batches must divide over the data axis — buckets() errors
+    # on an explicit --data-shards that violates this)
+    data_shards = (args.data_shards if args.data_shards is not None
+                   else min(max(n_dev // args.clause_shards, 1), max_batch))
+    topology = Topology(data_shards=data_shards,
+                        clause_shards=args.clause_shards)
+    policy = ServePolicy(max_batch=max_batch, max_wait_ms=args.max_wait_ms)
+    record = run(cfg, engines=engines, topology=topology,
+                 n_requests=n_requests, rps=args.rps, policy=policy,
                  seed=args.seed)
+    if not args.no_scaling and n_dev > 1:
+        sweep_requests = (min(n_requests, 256) if not args.smoke
+                          else n_requests)
+        # the main record already measured this exact point — don't redo it
+        reuse = ({data_shards: record["engines"][engines[0]]}
+                 if args.clause_shards == 1 and sweep_requests == n_requests
+                 else None)
+        record["batch_axis_scaling"] = run_batch_axis_scaling(
+            cfg, engine=engines[0], n_requests=sweep_requests,
+            rps=args.rps, policy=policy, seed=args.seed, reuse=reuse)
+
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)
+    topo = record["topology"]
+    print(f"topology: {topo['data_shards']}×data · {topo['clause_shards']}"
+          f"×clause on {record['devices']} devices "
+          f"({'sharded' if topo['sharded'] else 'single-device'} scores path)")
     for name, r in record["engines"].items():
         lm = r["latency_ms"]
         tag = "  [SATURATED: offered load > capacity; percentiles are " \
@@ -208,6 +305,9 @@ def main() -> None:
         print(f"{name}: p50={lm['p50']}ms p95={lm['p95']}ms "
               f"p99={lm['p99']}ms thru={r['throughput_rps']}req/s "
               f"pad_eff={r['padding_efficiency']}{tag}")
+    for row in record.get("batch_axis_scaling", []):
+        print(f"scaling[{row['engine']}] devices={row['devices']}: "
+              f"thru={row['throughput_rps']}req/s p95={row['p95_ms']}ms")
     print(f"wrote {args.out}")
 
 

@@ -1,18 +1,23 @@
-"""TM training task for the fault-tolerant ``Trainer`` — single or sharded.
+"""TM training task for the fault-tolerant ``Trainer`` — any topology.
 
-Glue that turns a ``TMConfig`` (+ optionally a mesh) into the four pieces
-``runtime/trainer.py`` consumes:
+Glue that turns a ``TMConfig`` + a ``Topology`` (or an existing mesh) into
+the four pieces ``runtime/trainer.py`` consumes, all driven through one
+``TMSession`` (core/session.py) so the trainer never wires its own
+prepare/scores/step paths:
 
-  * ``step_fn(state, batch)`` — one jitted ``train_step`` over a TM bundle;
+  * ``step_fn(state, batch)`` — one session ``train_step`` over a TM bundle;
     the step RNG is ``fold_in(root_key, step)``, a pure function of the step
     index, so a restarted run consumes *identical* randomness;
   * ``state`` — ``{"bundle": TMBundle, "step": i32}``;
   * ``batcher`` — a deterministic (seed, step) ``TMBatcher`` stream;
-  * ``to_ckpt`` / ``from_ckpt`` — checkpoint *views*: only the TA state and
-    step counter persist; every engine cache is derived data, re-prepared on
-    restore **on the current mesh**. That is what makes elastic
-    reshard-on-restore work: shard-local cache layouts change shape with the
-    clause-shard count, but the checkpoint never contains them.
+  * ``to_ckpt`` / ``from_ckpt`` — checkpoint *views* in the versioned
+    schema-v1 form (``checkpoint/tm_store.py``): TA state, step counter and
+    the config fingerprint persist; every engine cache is derived data,
+    rebuilt on restore **on the restoring session's topology**. That is what
+    makes elastic reshard-on-restore work: shard-local cache layouts change
+    shape with the clause-shard count, but the checkpoint never contains
+    them — and the fingerprint catches restoring into a different config
+    before any state is consumed.
 
 Metrics per step: batch accuracy *before* the update (through a registry
 engine), so the log doubles as an online-learning curve.
@@ -25,11 +30,10 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint import tm_store
 from repro.core import TMConfig, TMState
-from repro.core.api import (
-    DEFAULT_ENGINE, TMBundle, bundle_predict, init_bundle, train_step_jit)
-from repro.core.distributed import ShardedTM
-from repro.core.types import init_tm
+from repro.core.api import DEFAULT_ENGINE
+from repro.core.session import TMSession, Topology
 from repro.data.pipeline import TMBatcher
 
 
@@ -42,14 +46,13 @@ class TMTask:
     batcher: TMBatcher
     to_ckpt: Callable
     from_ckpt: Callable
-
-
-_predict_jit = jax.jit(bundle_predict, static_argnames=("engine",))
+    session: TMSession
 
 
 def make_tm_task(
     cfg: TMConfig,
     *,
+    topology: Topology | None = None,
     mesh=None,
     engines=None,
     batch: int = 32,
@@ -60,66 +63,51 @@ def make_tm_task(
     metrics_engine: str | None = None,
     metrics_every: int = 1,
 ) -> TMTask:
-    """Build a TM training task; pass ``mesh`` for the clause-sharded path.
+    """Build a TM training task on one session; any placement.
+
+    Pass ``topology=Topology(clause_shards=..., data_shards=...)`` (or an
+    explicit ``mesh`` to adopt) for the sharded path — the task itself is
+    placement-transparent.
 
     ``metrics_engine`` defaults to ``DEFAULT_ENGINE`` when that engine is
-    among the prepared ones, else to the first requested engine — the
-    bundle only carries caches for ``engines``. ``metrics_every`` skips the
-    pre-update accuracy pass on the other steps (set it to the trainer's
-    ``log_every``: inference through the metrics engine costs a full eval
-    per batch, wasted on steps whose metrics are never logged).
+    among the maintained ones, else to the first requested engine — the
+    bundle only carries caches for the session's engines. ``metrics_every``
+    skips the pre-update accuracy pass on the other steps (set it to the
+    trainer's ``log_every``: inference through the metrics engine costs a
+    full eval per batch, wasted on steps whose metrics are never logged).
     """
+    session = TMSession(cfg, topology, mesh=mesh, engines=engines,
+                        parallel=parallel, max_events=max_events)
     if metrics_engine is None:
-        names = tuple(engines) if engines is not None else ()
-        metrics_engine = (DEFAULT_ENGINE
-                          if engines is None or DEFAULT_ENGINE in names
-                          else names[0])
+        metrics_engine = (DEFAULT_ENGINE if DEFAULT_ENGINE in session.engines
+                          else session.engines[0])
     root = jax.random.key(seed)
     batcher = TMBatcher(cfg.n_features, cfg.n_classes, batch, seed=data_seed)
-
-    if mesh is None:
-        bundle = init_bundle(cfg, engines=engines)
-        sharded = None
-
-        def predict(b: TMBundle, x):
-            return _predict_jit(b, x, engine=metrics_engine)
-    else:
-        sharded = ShardedTM(cfg, mesh, engines=engines, parallel=parallel,
-                            max_events=max_events)
-        bundle = sharded.prepare(init_tm(cfg))
-
-        def predict(b: TMBundle, x):
-            # a sharded bundle's caches are shard-local layouts — they must
-            # be read through the sharded scores path, never bundle_scores
-            return jnp.argmax(sharded.scores(b, x, engine=metrics_engine), -1)
+    bundle = session.init_bundle()
 
     def step_fn(state: dict, batch_: dict):
         b = state["bundle"]
         rng = jax.random.fold_in(root, state["step"])
         metrics = {}
         if (int(state["step"]) + 1) % metrics_every == 0:  # logged steps only
-            pred = predict(b, batch_["x"])
+            pred = session.predict(b, batch_["x"], engine=metrics_engine)
             metrics = {"acc": jnp.mean(
                 (pred == batch_["y"]).astype(jnp.float32))}
-        if sharded is None:
-            nb = train_step_jit(b, batch_["x"], batch_["y"], rng,
-                                parallel=parallel, max_events=max_events)
-        else:
-            nb = sharded.train_step(b, batch_["x"], batch_["y"], rng)
+        nb = session.train_step(b, batch_["x"], batch_["y"], rng)
         return {"bundle": nb, "step": state["step"] + 1}, metrics
 
     def to_ckpt(state: dict) -> dict:
-        return {"ta_state": state["bundle"].state.ta_state,
-                "step": state["step"]}
+        return tm_store.checkpoint_tree(cfg, state["bundle"].state.ta_state,
+                                        step=int(state["step"]))
 
     def from_ckpt(loaded: dict, state: dict) -> dict:
-        ta = TMState(ta_state=jnp.asarray(loaded["ta_state"]))
-        if sharded is None:
-            bundle = init_bundle(cfg, engines=engines, state=ta)
-        else:
-            bundle = sharded.prepare(ta)  # caches rebuilt on the current mesh
-        return {"bundle": bundle, "step": jnp.asarray(loaded["step"])}
+        tm_store.validate_meta(loaded, cfg, where="trainer checkpoint")
+        ta = TMState(ta_state=jnp.asarray(loaded["ta_state"],
+                                          cfg.state_dtype))
+        # caches rebuilt on the restoring session's topology
+        return {"bundle": session.prepare(ta),
+                "step": jnp.asarray(loaded["step"], jnp.int32)}
 
     state = {"bundle": bundle, "step": jnp.asarray(0, jnp.int32)}
     return TMTask(step_fn=step_fn, state=state, batcher=batcher,
-                  to_ckpt=to_ckpt, from_ckpt=from_ckpt)
+                  to_ckpt=to_ckpt, from_ckpt=from_ckpt, session=session)

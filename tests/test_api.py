@@ -1,5 +1,6 @@
-"""TMBundle pytree semantics, TsetlinMachine estimator, TMDriver shim."""
+"""TMBundle pytree semantics, TsetlinMachine estimator, session checkpoints."""
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -7,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    TMConfig, TMBundle, TsetlinMachine, bundle_scores, init_bundle,
+    TMConfig, TMBundle, TsetlinMachine, Topology, bundle_scores, init_bundle,
     registered_engines, train_step, train_step_jit, validate,
 )
 
@@ -51,9 +52,49 @@ def test_engine_subset_bundle():
     assert set(bundle.caches) == {"indexed"}
     xs, _ = toy_data(8)
     # engines without a maintained cache still score (prepared on the fly)
-    got = bundle_scores(bundle, xs, engine="compact")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        got = bundle_scores(bundle, xs, engine="compact")
     want = bundle_scores(bundle, xs, engine="dense")
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bundle_scores_warns_once_on_missing_cache_slot():
+    """A missing cache slot rebuilds on the fly — with exactly one warning
+    per slot, so the per-call rebuild cost can't hide silently."""
+    from repro.core import api
+    api._REBUILD_WARNED.discard("compact")  # fresh slate for this slot
+    bundle = init_bundle(CFG, engines=("indexed",))
+    xs, _ = toy_data(6)
+    with pytest.warns(RuntimeWarning, match="compact.*rebuilding"):
+        bundle_scores(bundle, xs, engine="compact")
+    with warnings.catch_warnings():  # second call: silent (warned once)
+        warnings.simplefilter("error", RuntimeWarning)
+        bundle_scores(bundle, xs, engine="compact")
+
+
+def test_bundle_scores_reuses_maintained_cache():
+    """Regression: a maintained cache must actually be *read*, not silently
+    rebuilt from state — probe with a bundle whose cache and state disagree;
+    the scores must follow the cache."""
+    from repro.core.engines import get_engine
+    from repro.core.types import TMState
+    rng = np.random.default_rng(0)
+    inc = rng.uniform(size=(CFG.n_classes, CFG.n_clauses,
+                            CFG.n_literals)) < 0.4
+    state_a = TMState(ta_state=jnp.asarray(
+        np.where(inc, CFG.n_states + 1, CFG.n_states), jnp.int16))
+    cache_a = get_engine("compact").prepare(CFG, state_a)
+    blank = init_bundle(CFG, engines=("dense",))  # untrained state
+    probe = TMBundle(cfg=CFG, state=blank.state, caches={"compact": cache_a})
+    xs, _ = toy_data(8)
+    got = np.asarray(bundle_scores(probe, xs, engine="compact"))
+    from_cache = np.asarray(
+        get_engine("compact").scores(CFG, cache_a, xs))
+    from_state = np.asarray(bundle_scores(blank, xs, engine="dense"))
+    np.testing.assert_array_equal(got, from_cache)
+    assert (got != from_state).any(), \
+        "probe degenerate: cache and state scores coincide"
 
 
 # ---------------------------------------------------------------------------
@@ -90,6 +131,37 @@ def test_train_step_jit_and_eager_agree():
                                   np.asarray(jitted.index.counts))
 
 
+def test_train_step_mask_ignores_padding_rows():
+    """Masked-out rows must not influence the update — padding with zeros or
+    with garbage gives bit-identical states; an unmasked garbage row does
+    not (the mask is load-bearing)."""
+    xs, ys = toy_data(8, seed=4)
+    garbage_x = jnp.ones_like(xs[:3])
+    garbage_y = jnp.ones_like(ys[:3])
+    mask = jnp.arange(11) < 8
+    key = jax.random.key(5)
+    for parallel in (False, True):
+        a = train_step(init_bundle(CFG),
+                       jnp.concatenate([xs, jnp.zeros_like(garbage_x)]),
+                       jnp.concatenate([ys, jnp.zeros_like(garbage_y)]),
+                       key, mask, parallel=parallel, max_events=ALL_EVENTS)
+        b = train_step(init_bundle(CFG),
+                       jnp.concatenate([xs, garbage_x]),
+                       jnp.concatenate([ys, garbage_y]),
+                       key, mask, parallel=parallel, max_events=ALL_EVENTS)
+        np.testing.assert_array_equal(np.asarray(a.state.ta_state),
+                                      np.asarray(b.state.ta_state),
+                                      err_msg=f"parallel={parallel}")
+        c = train_step(init_bundle(CFG),
+                       jnp.concatenate([xs, garbage_x]),
+                       jnp.concatenate([ys, garbage_y]),
+                       key, jnp.ones(11, bool), parallel=parallel,
+                       max_events=ALL_EVENTS)
+        assert (np.asarray(c.state.ta_state)
+                != np.asarray(a.state.ta_state)).any(), \
+            f"parallel={parallel}: garbage rows had no effect unmasked"
+
+
 # ---------------------------------------------------------------------------
 # TsetlinMachine estimator
 # ---------------------------------------------------------------------------
@@ -115,17 +187,40 @@ def test_estimator_minibatch_fit_and_seeded_reproducibility():
                                   np.asarray(b.state.ta_state))
 
 
-def test_estimator_checkpoint_roundtrip():
-    xs, ys = toy_data(32)
-    machine = TsetlinMachine(CFG, seed=1).init().fit(xs, ys)
-    tree = machine.as_pytree()
-    restored = TsetlinMachine(CFG).load_pytree(
-        jax.tree_util.tree_map(jnp.asarray, tree))
-    np.testing.assert_array_equal(
-        np.asarray(restored.predict(xs, engine="indexed")),
-        np.asarray(machine.predict(xs, engine="indexed")))
-    for name, ok in validate(CFG, restored.state, restored.index).items():
-        assert bool(ok), name
+def test_fit_trains_trailing_partial_batch():
+    """24 samples at batch_size=16: the trailing 8 pad to the compiled shape
+    under a mask — they must train (historically they were dropped), and the
+    padded rows must not (zero vs garbage padding is bit-identical)."""
+    xs, ys = toy_data(24, seed=8)
+    machine = TsetlinMachine(CFG, seed=3).init()
+    machine.fit(xs, ys, batch_size=16)
+
+    # reference: the same two steps driven by hand with the same key chain
+    ref = TsetlinMachine(CFG, seed=3).init()
+    key = ref._next_key(None)
+    key, k1 = jax.random.split(key)
+    ref.partial_fit(xs[:16], ys[:16], k1, mask=jnp.ones(16, bool))
+    key, k2 = jax.random.split(key)
+    pad_x = jnp.concatenate([xs[16:], jnp.zeros((8, CFG.n_features),
+                                                xs.dtype)])
+    pad_y = jnp.concatenate([ys[16:], jnp.zeros((8,), ys.dtype)])
+    ref.partial_fit(pad_x, pad_y, k2, mask=jnp.arange(16) < 8)
+    np.testing.assert_array_equal(np.asarray(machine.state.ta_state),
+                                  np.asarray(ref.state.ta_state))
+
+    # the trailing batch really trained: dropping it changes the state
+    dropped = TsetlinMachine(CFG, seed=3).init()
+    dkey = dropped._next_key(None)
+    dkey, d1 = jax.random.split(dkey)
+    dropped.partial_fit(xs[:16], ys[:16], d1, mask=jnp.ones(16, bool))
+    assert (np.asarray(machine.state.ta_state)
+            != np.asarray(dropped.state.ta_state)).any()
+
+
+def test_fit_batch_size_larger_than_dataset_raises():
+    xs, ys = toy_data(8)
+    with pytest.raises(ValueError, match="exceeds dataset size"):
+        TsetlinMachine(CFG, seed=0).init().fit(xs, ys, batch_size=16)
 
 
 def test_estimator_respects_capacity_config():
@@ -136,46 +231,39 @@ def test_estimator_respects_capacity_config():
 
 
 # ---------------------------------------------------------------------------
-# TMDriver deprecated shim
+# Topology + versioned checkpoints (single-device; sharded counterparts in
+# tests/test_tm_session.py's forced-multi-device subprocess)
 # ---------------------------------------------------------------------------
 
-def test_driver_shim_deprecation_and_parity():
-    from repro.core.driver import TMDriver
-    with pytest.warns(DeprecationWarning):
-        driver = TMDriver.create(CFG)
+def test_topology_validates_and_describes():
+    t = Topology(clause_shards=2, data_shards=2, engines=["indexed"])
+    assert t.engines == ("indexed",)  # normalised to a tuple
+    assert t.n_devices == 4 and t.is_sharded
+    assert Topology().describe() == {
+        "clause_shards": 1, "data_shards": 1, "devices": 1}
+    with pytest.raises(ValueError, match="must be >= 1"):
+        Topology(clause_shards=0)
+    with pytest.raises(RuntimeError, match="devices"):
+        TsetlinMachine(CFG, topology=Topology(clause_shards=512)).init()
+
+
+def test_estimator_checkpoint_roundtrip(tmp_path):
     xs, ys = toy_data(32)
-    driver.train_batch(xs, ys, jax.random.key(0))
-    for name, ok in validate(CFG, driver.state, driver.index).items():
-        assert bool(ok), name
-    want = np.asarray(driver.scores(xs, engine="dense"))
-    for name in registered_engines():
-        np.testing.assert_array_equal(
-            np.asarray(driver.scores(xs, engine=name)), want, err_msg=name)
-    # legacy persistence schema intact
-    tree = driver.as_pytree()
-    assert set(tree) == {"ta_state", "lists", "counts", "pos"}
-    with pytest.warns(DeprecationWarning):
-        restored = TMDriver.create(CFG).load_pytree(tree)
+    machine = TsetlinMachine(CFG, seed=1).init().fit(xs, ys)
+    machine.save(tmp_path / "ck", step=2)
+    restored = TsetlinMachine.load(tmp_path / "ck", CFG)
     np.testing.assert_array_equal(
         np.asarray(restored.predict(xs, engine="indexed")),
-        np.asarray(driver.predict(xs, engine="indexed")))
+        np.asarray(machine.predict(xs, engine="indexed")))
+    for name, ok in validate(CFG, restored.state, restored.index).items():
+        assert bool(ok), name
 
 
-def test_driver_shim_sync_index_false_keeps_other_engines_fresh():
-    """Legacy semantics: sync_index=False leaves only the *index* stale;
-    bitpack/compact/dense always evaluate off the current state."""
-    import warnings
-    from repro.core.driver import TMDriver
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        driver = TMDriver.create(CFG)
-    xs, ys = toy_data(32)
-    driver.train_batch(xs, ys, jax.random.key(3), sync_index=False)
-    want = np.asarray(driver.scores(xs, engine="dense"))
-    for name in ("bitpack", "bitpack_xla", "compact"):
-        np.testing.assert_array_equal(
-            np.asarray(driver.scores(xs, engine=name)), want, err_msg=name)
-    # the index is stale by request; rebuild restores parity
-    driver.rebuild_index()
-    np.testing.assert_array_equal(
-        np.asarray(driver.scores(xs, engine="indexed")), want)
+def test_checkpoint_fingerprint_mismatch_is_clear(tmp_path):
+    from repro.checkpoint import CheckpointMismatch
+    xs, ys = toy_data(16)
+    TsetlinMachine(CFG, seed=1).init().fit(xs, ys).save(tmp_path / "ck")
+    # same shapes, different semantics — only the fingerprint can catch it
+    other = dataclasses.replace(CFG, s=9.0)
+    with pytest.raises(CheckpointMismatch, match="fingerprint mismatch"):
+        TsetlinMachine.load(tmp_path / "ck", other)

@@ -1,0 +1,115 @@
+"""Topology-transparent TMSession parity on a forced 8-device host mesh.
+
+The acceptance property of the session API (subprocess,
+``--xla_force_host_platform_device_count=8``):
+
+  * the *same estimator script* under ``Topology(1 device)``,
+    ``Topology(clause_shards=4)`` and
+    ``Topology(data_shards=2, clause_shards=2)`` produces identical
+    predictions and bit-identical TA states for the same seed, in both
+    learning modes — including a trailing partial batch padded under a
+    sample mask (sequential mode exercises the hierarchical data×clause
+    composition; parallel mode the batch sharding);
+  * a versioned checkpoint written under one topology (4 clause shards)
+    restores bit-exactly under others (1 device, then 2×2) — caches rebuilt
+    on the restoring topology, state resharded on load;
+  * restoring with a semantically different config (same shapes) fails with
+    the config-fingerprint error, not a shape complaint.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (
+        TMConfig, TMSession, Topology, TsetlinMachine, registered_engines)
+    from repro.checkpoint import CheckpointMismatch
+
+    cfg = TMConfig(n_classes=3, n_clauses=16, n_features=12, n_states=50,
+                   s=3.0, threshold=4)
+    ALL = cfg.n_classes * cfg.n_clauses * cfg.n_literals
+    rng = np.random.default_rng(0)
+    # 20 samples at batch_size=8 -> the third batch pads 4 rows under a mask
+    xs = jnp.asarray(rng.integers(0, 2, (20, 12)), jnp.uint8)
+    ys = jnp.asarray(rng.integers(0, 3, 20), jnp.int32)
+    xe = jnp.asarray(rng.integers(0, 2, (8, 12)), jnp.uint8)
+
+    TOPOLOGIES = {
+        "single": Topology(),
+        "clause4": Topology(clause_shards=4),
+        "data2xclause2": Topology(data_shards=2, clause_shards=2),
+    }
+
+    # ---- estimator parity: same script, any placement, both modes ----
+    trained = {}
+    for parallel in (False, True):
+        machines = {}
+        for name, topo in TOPOLOGIES.items():
+            m = TsetlinMachine(cfg, topology=topo, parallel=parallel,
+                               max_events_per_batch=ALL, seed=7).init()
+            m.fit(xs, ys, epochs=2, batch_size=8)
+            machines[name] = m
+        ref = machines["single"]
+        ref_ta = np.asarray(ref.state.ta_state)
+        ref_pred = np.asarray(ref.predict(xe, engine="dense"))
+        for name, m in machines.items():
+            np.testing.assert_array_equal(
+                np.asarray(m.state.ta_state), ref_ta,
+                err_msg=f"{name} parallel={parallel}")
+            for engine in registered_engines():
+                np.testing.assert_array_equal(
+                    np.asarray(m.predict(xe, engine=engine)), ref_pred,
+                    err_msg=f"{name}/{engine} parallel={parallel}")
+        trained[parallel] = machines
+    print("tm-session-parity-ok")
+
+    # ---- versioned checkpoint: save on 4 clause shards, load anywhere ----
+    tmp = tempfile.mkdtemp()
+    saver = trained[False]["clause4"]
+    saver.save(tmp + "/ck", step=5)
+    want = np.asarray(saver.predict(xe, engine="dense"))
+    want_ta = np.asarray(saver.state.ta_state)
+    for name in ("single", "data2xclause2"):   # 4 shards -> 1 -> 2x2
+        loaded = TsetlinMachine.load(tmp + "/ck", cfg,
+                                     topology=TOPOLOGIES[name],
+                                     max_events_per_batch=ALL)
+        np.testing.assert_array_equal(
+            np.asarray(loaded.state.ta_state), want_ta, err_msg=name)
+        for engine in registered_engines():
+            np.testing.assert_array_equal(
+                np.asarray(loaded.predict(xe, engine=engine)), want,
+                err_msg=f"restore-{name}/{engine}")
+    print("tm-session-checkpoint-ok")
+
+    # ---- fingerprint: same shapes, different semantics -> clear error ----
+    other = dataclasses.replace(cfg, threshold=9)
+    try:
+        TsetlinMachine.load(tmp + "/ck", other)
+        raise AssertionError("fingerprint mismatch not detected")
+    except CheckpointMismatch as e:
+        assert "fingerprint mismatch" in str(e), e
+    print("tm-session-fingerprint-ok")
+""")
+
+
+@pytest.mark.slow
+def test_tm_session_topology_parity_subprocess():
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    for marker in ("tm-session-parity-ok", "tm-session-checkpoint-ok",
+                   "tm-session-fingerprint-ok"):
+        assert marker in res.stdout, res.stdout + "\n" + res.stderr

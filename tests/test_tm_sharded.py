@@ -29,11 +29,10 @@ SCRIPT = textwrap.dedent("""
     import numpy as np
 
     from repro.core import (
-        TMConfig, TMState, bundle_scores, init_bundle, registered_engines,
-        train_step)
+        TMConfig, TMSession, TMState, bundle_scores, init_bundle,
+        registered_engines, train_step)
     from repro.core.distributed import (
-        ShardedTM, make_sharded_prepare, make_sharded_scores,
-        make_sharded_train_step)
+        make_sharded_prepare, make_sharded_scores, make_sharded_train_step)
     from repro.launch.mesh import make_host_mesh
 
     cfg = TMConfig(n_classes=3, n_clauses=16, n_features=12, n_states=50,
@@ -47,7 +46,9 @@ SCRIPT = textwrap.dedent("""
 
     mesh = make_host_mesh(data=2, model=4)
     ref = init_bundle(cfg, state=state)
-    stm = ShardedTM(cfg, mesh, max_events=ALL)
+    stm = TMSession(cfg, mesh=mesh, max_events=ALL)
+    assert stm.describe() == {"clause_shards": 4, "data_shards": 2,
+                              "devices": 8, "sharded": True}, stm.describe()
     sb = stm.prepare(state)
 
     # ---- scores parity: every registered engine, bit-exact vs dense ----
@@ -118,7 +119,7 @@ SCRIPT = textwrap.dedent("""
     np.testing.assert_array_equal(
         np.asarray(tr2.state["bundle"].state.ta_state), ref_ta)
     # the rebuilt shard-local caches on mesh2 serve identical scores
-    stm2 = ShardedTM(cfg, mesh2, max_events=ALL)
+    stm2 = TMSession(cfg, mesh=mesh2, max_events=ALL)
     want3 = np.asarray(bundle_scores(ref_tr.state["bundle"], xs_eval,
                                      engine="dense"))
     for name in registered_engines():
