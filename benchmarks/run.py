@@ -55,7 +55,11 @@ def main() -> None:
     rows = tm_speedup.run(fast=not args.full)
     for r in rows:
         _print_tm_row(r)
-    tm_speedup.write_json(rows)
+
+    # --- engine × backend × topology sweep (kernel backend registry) ------
+    sweep = tm_speedup.backend_topology_sweep()
+    tm_speedup.print_sweep(sweep, prefix="tm/sweep")
+    tm_speedup.write_json(rows, backend_sweep=sweep)
 
     # --- paper §3 Remarks: analytic work ratios at paper scale ------------
     from repro.core.indexing import dense_work

@@ -2,9 +2,10 @@
 
 Grid: (dataset-family × features × clauses), measuring
   * inference us/sample for every requested registry engine
-    (default: dense | bitpack_xla | compact | indexed — the Pallas
-    ``bitpack`` engine runs interpret-mode on CPU containers and is
-    excluded from timing by default; pass it explicitly on a TPU),
+    (default: dense | bitpack_xla | compact | indexed — ``bitpack_xla``
+    is the backend-registry alias pinning the packed engine to the XLA
+    body, so the grid times identically on every host; the
+    ``backend_topology_sweep`` below covers the kernel routes),
   * training us/sample for dense learning with / without engine-cache
     maintenance (the jit-native ``api.train_step``),
   * the §3 'Remarks' WORK RATIO (indexed literal-inspections / dense),
@@ -140,6 +141,72 @@ GRID_FAMILIES = [mnist_like, fmnist_like]
 CLAUSE_GRID = (256, 1024, 4096)
 
 
+# ---------------------------------------------------------------------------
+# Engine × backend × topology sweep (kernel backend registry, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def backend_topology_sweep(*, engines=("bitpack", "indexed"),
+                           backends=None, n_eval=32, n_train=8,
+                           seed=0) -> list[dict]:
+    """Inference + train-step timings per (engine × backend × topology).
+
+    Backends come from the kernel registry (``kernels/backend.py``):
+    ``xla`` and ``pallas_interpret`` everywhere, plus compiled ``pallas``
+    when this host is a TPU. Topologies: single-device always, plus a
+    4-way clause-sharded placement when the host exposes ≥ 4 devices (CI
+    forces 4 via ``--xla_force_host_platform_device_count``). Interpret-mode
+    rows measure the *route* (they execute the kernel body in Python, so
+    their magnitudes are not comparable to compiled rows — recorded for
+    completeness, compared only like-for-like across PRs).
+    """
+    from repro.core.session import TMSession, Topology
+    from repro.kernels import backend as kbackend
+
+    if backends is None:
+        backends = ("xla", "pallas_interpret")
+        if jax.default_backend() == "tpu":
+            backends += ("pallas",)
+    shard_grid = [1]
+    if jax.local_device_count() >= 4:
+        shard_grid.append(4)
+
+    cfg0 = TMConfig(n_classes=10, n_clauses=256, n_features=196)
+    state = synthetic_trained_state(
+        dataclasses.replace(cfg0, backend="xla"), 58.0, seed)
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.integers(0, 2, (n_eval, cfg0.n_features)), jnp.uint8)
+    txs = jnp.asarray(rng.integers(0, 2, (n_train, cfg0.n_features)),
+                      jnp.uint8)
+    tys = jnp.asarray(rng.integers(0, cfg0.n_classes, n_train), jnp.int32)
+    key = jax.random.key(seed)
+
+    rows = []
+    for backend in backends:
+        cfg = dataclasses.replace(cfg0, backend=backend)
+        for shards in shard_grid:
+            for engine in engines:
+                # donate=False: the timing loop reuses one bundle across reps
+                session = TMSession(cfg, Topology(clause_shards=shards,
+                                                  engines=(engine,),
+                                                  donate=False))
+                bundle = session.prepare(state)
+                fn = lambda b, x: session.scores(b, x, engine=engine)
+                t_inf = _timeit(fn, bundle, xs)
+                t_tr = _timeit(
+                    lambda b, x, y: session.train_step(b, x, y, key),
+                    bundle, txs, tys, reps=1)
+                rows.append({
+                    "engine": engine,
+                    "backend": kbackend.resolve_backend(backend),
+                    "clause_shards": shards,
+                    "devices": jax.local_device_count(),
+                    "infer_us": t_inf / n_eval * 1e6,
+                    "train_us": t_tr / n_train * 1e6,
+                })
+    return rows
+
+
 def run(fast: bool = True, engines=DEFAULT_ENGINES):
     rows = []
     clause_grid = CLAUSE_GRID[:2] if fast else CLAUSE_GRID
@@ -153,16 +220,27 @@ def run(fast: bool = True, engines=DEFAULT_ENGINES):
     return rows
 
 
-def write_json(rows, path: str = "BENCH_tm.json") -> None:
+def print_sweep(sweep: list[dict], prefix: str = "sweep") -> None:
+    """One line per backend-sweep row (shared by main and benchmarks/run.py)."""
+    for r in sweep:
+        print(f"{prefix}/{r['engine']}/{r['backend']}"
+              f"/shards{r['clause_shards']}: "
+              f"infer={r['infer_us']:.2f}us train={r['train_us']:.2f}us")
+
+
+def write_json(rows, path: str = "BENCH_tm.json",
+               backend_sweep=None) -> None:
     """Machine-readable perf record, one file per run (tracked across PRs)."""
     payload = {
         "bench": "tm_speedup",
-        "schema": 1,
+        "schema": 2,
         "backend": jax.default_backend(),
         "host": platform.machine(),
+        "devices": jax.local_device_count(),
         "units": {"infer_*_us": "us/sample", "train_*_us": "us/sample",
                   "work_ratio": "indexed/dense literal inspections"},
         "rows": rows,
+        "backend_sweep": backend_sweep or [],
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
@@ -174,8 +252,18 @@ def main():
     ap.add_argument("--engines", default=",".join(DEFAULT_ENGINES))
     ap.add_argument("--out", default="BENCH_tm.json",
                     help="JSON output path ('' to skip)")
+    ap.add_argument("--sweep-only", action="store_true",
+                    help="run only the engine×backend×topology sweep "
+                         "(the CI gate on a forced multi-device host)")
     args = ap.parse_args()
     engines = tuple(args.engines.split(","))
+
+    if args.sweep_only:
+        sweep = backend_topology_sweep()
+        print_sweep(sweep)
+        if args.out:
+            write_json([], args.out, backend_sweep=sweep)
+        return
 
     rows = run(fast=not args.full, engines=engines)
     cols = ["family", "features", "clauses", "work_ratio"]
@@ -188,8 +276,10 @@ def main():
         print(",".join(
             f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
             for c in cols))
+    sweep = backend_topology_sweep()
+    print_sweep(sweep)
     if args.out:
-        write_json(rows, args.out)
+        write_json(rows, args.out, backend_sweep=sweep)
 
 
 if __name__ == "__main__":

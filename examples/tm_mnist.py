@@ -36,6 +36,9 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_tm_ckpt")
     ap.add_argument("--engines", default=None,
                     help="comma-separated engine names (default: registry)")
+    ap.add_argument("--max-events", type=int, default=1 << 19,
+                    help="cache-sync event buffer capacity per step "
+                         "(overflow is asserted on, not silently dropped)")
     args = ap.parse_args()
 
     cfg = TMConfig(n_classes=10, n_clauses=args.clauses,
@@ -49,13 +52,13 @@ def main():
     engines = tuple(args.engines.split(",")) if args.engines else None
     topology = Topology(clause_shards=args.clause_shards,
                         data_shards=args.data_shards, engines=engines)
-    # full-batch epochs cross many TA boundaries per step: size the event
-    # buffer to the worst case so every cache stays an exact mirror (an
-    # overflowed buffer drops events — a silent-staleness config error the
-    # state-only checkpoint roundtrip below would catch)
-    all_events = cfg.n_classes * cfg.n_clauses * cfg.n_literals
+    # Full-batch epochs cross many TA boundaries per step, but nowhere near
+    # the n_classes·n_clauses·n_literals worst case (~4M here; the observed
+    # load is ~150k). Size the buffer to the expected load and let the
+    # overflow counter (asserted every epoch below) catch an undersized
+    # buffer loudly instead of letting dropped events leave stale caches.
     machine = TsetlinMachine(cfg, topology=topology, seed=42,
-                             max_events_per_batch=all_events).init()
+                             max_events_per_batch=args.max_events).init()
     engines = machine.engines
     # sharded caches can't build on the fly: evaluate through a maintained one
     eval_engine = "indexed" if "indexed" in engines else engines[0]
@@ -65,6 +68,9 @@ def main():
         t0 = time.time()
         machine.partial_fit(x_tr, y_tr)
         dt = time.time() - t0
+        assert machine.event_overflow == 0, (
+            f"event buffer overflowed ({machine.event_overflow} dropped "
+            "events — caches are stale): raise --max-events")
         acc = machine.evaluate(x_te, y_te, engine=eval_engine)
         print(f"epoch {epoch}: acc={acc:.3f}  "
               f"train {args.train/dt:.0f} samples/s")

@@ -16,14 +16,12 @@ if git ls-files | grep -q '\.pyc$'; then
 fi
 
 echo "== tier-1 tests =="
-# Deselected: pre-existing-at-seed mixtral prefill/decode mismatch (tracked
-# as a ROADMAP.md open item). The sharding subprocess test is back in (the
-# jax-compat shims in launch/mesh.py + sharding.py fixed it on jax 0.4.37),
-# and the TM sharded-parity + session-topology-parity subprocess tests ride
-# with it — the three `slow` tests put this gate at ~30 min on the 1-core
-# container; use `pytest -m "not slow"` for a fast local loop (pytest.ini).
-python -m pytest -x -q \
-  --deselect "tests/test_models_smoke.py::test_prefill_decode_consistency[mixtral-8x7b]"
+# The seed's mixtral prefill/decode deselect is gone: inference MoE routing
+# is dropless now (models/moe.py), so prefill and step-wise decode agree.
+# The `slow` subprocess tests (sharding, TM sharded/session/backends parity)
+# put this gate at ~40 min on the 1-core container; use
+# `pytest -m "not slow"` for a fast local loop (pytest.ini).
+python -m pytest -x -q
 
 echo "== quickstart (TsetlinMachine estimator API) =="
 python examples/quickstart.py
@@ -31,18 +29,21 @@ python examples/quickstart.py
 echo "== benchmark smoke cell =="
 python -m benchmarks.run --smoke
 
-echo "== tm_serve smoke (sharded TM serving on a forced 4-device mesh) =="
+echo "== tm_serve smoke (sharded Pallas-interpret serving, 4-device mesh) =="
 rm -f BENCH_tm_serve.json
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
-  python -m repro.launch.tm_serve --smoke
+  python -m repro.launch.tm_serve --smoke --backend pallas_interpret
 python - <<'EOF'
 import json
 d = json.load(open("BENCH_tm_serve.json"))
 assert d["engines"], "no engine records in BENCH_tm_serve.json"
 # the smoke must exercise the sharded scores path on the 4-device mesh and
-# record the device count + per-device-count batch-axis scaling
+# record the device count + per-device-count batch-axis scaling, serving the
+# packed engine through the Pallas-interpret kernel route
 assert d["devices"] == 4, f"device count not recorded: {d.get('devices')}"
 assert d["topology"]["sharded"], d["topology"]
+assert d["topology"]["backend"] == "pallas_interpret", d["topology"]
+assert "bitpack" in d["engines"], list(d["engines"])
 sweep = {row["devices"]: row for row in d["batch_axis_scaling"]}
 assert set(sweep) == {1, 2, 4}, sweep
 for n_dev, row in sweep.items():
@@ -52,7 +53,45 @@ for name, r in d["engines"].items():
     assert {"p50", "p90", "p95", "p99"} <= set(lat), (name, lat)
     assert r["throughput_rps"] > 0, (name, r)
 print("BENCH_tm_serve.json well-formed:", ", ".join(d["engines"]),
-      "| scaling devices:", sorted(sweep))
+      "| scaling devices:", sorted(sweep),
+      "| backend:", d["topology"]["backend"])
+EOF
+
+echo "== dryrun --tm (kernel backend routes + the single vote all-reduce) =="
+python -m repro.launch.dryrun --tm
+python - <<'EOF'
+import json
+d = json.load(open("results/dryrun/tm/2x4.json"))
+assert not d["failures"], d["failures"]
+routes = d["backend_routes"]
+# the Pallas route must actually run the kernel shard-locally, with the
+# (B, m) vote all-reduce still the only collective (DESIGN.md §8)
+pi = routes["pallas_interpret"]
+assert pi["pallas_call_in_jaxpr"] and pi["one_vote_all_reduce"], pi
+assert not routes["xla"]["pallas_call_in_jaxpr"], routes["xla"]
+print("dryrun --tm backend routes OK:",
+      {k: v["pallas_call_in_jaxpr"] for k, v in routes.items()})
+EOF
+
+echo "== BENCH_tm.json backend sweep (engine x backend x topology) =="
+rm -f BENCH_tm.json
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  python -m benchmarks.tm_speedup --sweep-only
+python - <<'EOF'
+import json
+d = json.load(open("BENCH_tm.json"))
+sweep = d["backend_sweep"]
+assert sweep, "empty backend_sweep in BENCH_tm.json"
+cells = {(r["engine"], r["backend"], r["clause_shards"]) for r in sweep}
+for engine in ("bitpack", "indexed"):
+    for backend in ("xla", "pallas_interpret"):
+        for shards in (1, 4):
+            assert (engine, backend, shards) in cells, (
+                engine, backend, shards, sorted(cells))
+for r in sweep:
+    assert r["infer_us"] > 0 and r["train_us"] > 0, r
+    assert r["devices"] == 4, r
+print(f"BENCH_tm.json backend sweep well-formed: {len(sweep)} cells")
 EOF
 
 echo "CI smoke: OK"

@@ -40,15 +40,24 @@ class CheckpointMismatch(ValueError):
     """Checkpoint incompatible with the restoring machine's config/schema."""
 
 
+# Execution details that do not change what a checkpoint *is*: a state
+# trained on one kernel backend restores onto any other (results are
+# bit-exact across backends by the registry contract), exactly like
+# restoring onto a different topology.
+_EXECUTION_FIELDS = frozenset({"backend"})
+
+
 def config_fingerprint(cfg) -> np.ndarray:
     """(32,) uint8 sha256 over the canonical config field dump.
 
-    Every dataclass field participates (capacities included: they size the
-    rebuilt caches); values render via ``repr`` for a stable text form that
-    also covers non-JSON leaves like dtypes.
+    Every *model* dataclass field participates (capacities included: they
+    size the rebuilt caches); pure execution fields (``_EXECUTION_FIELDS``)
+    do not. Values render via ``repr`` for a stable text form that also
+    covers non-JSON leaves like dtypes.
     """
     fields = {f.name: repr(getattr(cfg, f.name))
-              for f in dataclasses.fields(cfg)}
+              for f in dataclasses.fields(cfg)
+              if f.name not in _EXECUTION_FIELDS}
     blob = json.dumps(fields, sort_keys=True).encode()
     return np.frombuffer(hashlib.sha256(blob).digest(), np.uint8).copy()
 

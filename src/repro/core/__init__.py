@@ -20,6 +20,7 @@ from repro.core.tm import (
 from repro.core.indexing import (
     ClauseIndex,
     CompactClauses,
+    EventBuffer,
     apply_events,
     build_index,
     compact,
@@ -63,6 +64,7 @@ __all__ = [
     "update_sample", "ClauseIndex", "CompactClauses", "apply_events",
     "build_index", "compact", "compact_apply_events", "compact_eval",
     "compact_scores", "delete", "dense_work", "empty_index",
+    "EventBuffer",
     "events_from_transition", "indexed_scores", "indexed_work", "insert",
     "validate", "validate_compact", "EvalEngine", "get_engine", "register_engine",
     "registered_engines", "TMBundle", "TMSession", "Topology",

@@ -35,19 +35,31 @@ DEFAULT_ENGINE = "indexed"
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class TMBundle:
-    """Static config + TA state + engine caches, as one jit-friendly pytree."""
+    """Static config + TA state + engine caches, as one jit-friendly pytree.
+
+    ``event_overflow`` is the cumulative count of cache-sync events dropped
+    by the fixed-shape buffer since the bundle was prepared (None before any
+    training). It stays on device — reading it costs one scalar transfer —
+    and non-zero means the caches are stale: raise ``max_events`` instead of
+    sizing it to the worst case blindly (``indexing.EventBuffer``). The
+    buffer is per clause shard, so the threshold the counter reflects scales
+    with ``clause_shards`` — size ``max_events`` for the least-sharded
+    placement a state will run on.
+    """
 
     cfg: TMConfig
     state: TMState
     caches: dict[str, Any]
+    event_overflow: jax.Array | None = None
 
     def tree_flatten(self):
-        return (self.state, self.caches), self.cfg
+        return (self.state, self.caches, self.event_overflow), self.cfg
 
     @classmethod
     def tree_unflatten(cls, cfg, children):
-        state, caches = children
-        return cls(cfg=cfg, state=state, caches=caches)
+        state, caches, event_overflow = children
+        return cls(cfg=cfg, state=state, caches=caches,
+                   event_overflow=event_overflow)
 
     @property
     def index(self) -> indexing.ClauseIndex:
@@ -88,7 +100,8 @@ def init_bundle(
     state = state if state is not None else init_tm(cfg, rng)
     caches = {key: cache_provider(key).prepare(cfg, state)
               for key in cache_keys_for(names)}
-    return TMBundle(cfg=cfg, state=state, caches=caches)
+    return TMBundle(cfg=cfg, state=state, caches=caches,
+                    event_overflow=jnp.zeros((), jnp.int32))
 
 
 # cache_keys whose on-the-fly rebuild has already been warned about once —
@@ -129,12 +142,17 @@ def bundle_predict(
 
 
 def sync_caches(bundle: TMBundle, new_state: TMState,
-                events: indexing.Event) -> TMBundle:
-    """New bundle whose caches absorbed ``events`` via their providers."""
+                buf: indexing.EventBuffer) -> TMBundle:
+    """New bundle whose caches absorbed the buffer's events via their
+    providers; the bundle's overflow counter accumulates the buffer's."""
     caches = {key: cache_provider(key).update_cache(
-                  bundle.cfg, cache, new_state, events)
+                  bundle.cfg, cache, new_state, buf.events)
               for key, cache in bundle.caches.items()}
-    return TMBundle(cfg=bundle.cfg, state=new_state, caches=caches)
+    overflow = buf.overflow
+    if bundle.event_overflow is not None:
+        overflow = overflow + bundle.event_overflow
+    return TMBundle(cfg=bundle.cfg, state=new_state, caches=caches,
+                    event_overflow=overflow)
 
 
 def train_step(
@@ -153,9 +171,11 @@ def train_step(
     or the batch-parallel approximation when ``parallel=True``), then the
     include-mask diff replays into each cache as a fixed-shape masked event
     buffer (≤ ``max_events`` boundary crossings per batch — overflow drops
-    events and is a config error: the default suits small minibatches, while
-    full-batch steps need the worst case
-    ``n_classes · n_clauses · n_literals``, cf. the examples).
+    events and is a config error). Dropped events are *counted* into the
+    returned bundle's ``event_overflow``, so callers size ``max_events`` to
+    the expected load and assert the counter stays 0 instead of paying the
+    ``n_classes · n_clauses · n_literals`` worst case up front (cf. the
+    examples).
 
     ``mask`` (B,) bool marks valid samples: padded rows consume their
     per-sample randomness but apply no update, so a trailing partial batch
@@ -167,9 +187,9 @@ def train_step(
     update = (tm.update_batch_parallel if parallel
               else tm.update_batch_sequential)
     new_state = update(cfg, bundle.state, xs, ys, rng, mask=mask)
-    events = indexing.events_from_transition(
+    buf = indexing.events_from_transition(
         old_inc, include_mask(cfg, new_state), max_events)
-    return sync_caches(bundle, new_state, events)
+    return sync_caches(bundle, new_state, buf)
 
 
 # Donation updates TA states/caches in place on accelerators; the CPU backend

@@ -109,7 +109,8 @@ def make_sharded_prepare(cfg: TMConfig, mesh, *, engines=None):
     def prepare(state: TMState) -> TMBundle:
         state = TMState(ta_state=jax.device_put(state.ta_state, state_sh))
         caches = fn(state) if keys else {}
-        return TMBundle(cfg=cfg, state=state, caches=caches)
+        return TMBundle(cfg=cfg, state=state, caches=caches,
+                        event_overflow=jnp.zeros((), jnp.int32))
 
     return prepare
 
@@ -192,7 +193,8 @@ def make_sharded_train_step(cfg: TMConfig, mesh, *, engines=None,
     y_spec = P(baxes) if baxes else P(None)
     pol = _sharded_polarity(cfg, mesh)
 
-    def local_fn(state_l: TMState, caches_l, pol_l, xs, ys, key_data, mask):
+    def local_fn(state_l: TMState, caches_l, pol_l, xs, ys, key_data, mask,
+                 overflow_in):
         rng = jax.random.wrap_key_data(key_data)
         start = jax.lax.axis_index(CLAUSE_AXIS) * n_local
         old_inc = include_mask(cfg, state_l)
@@ -232,27 +234,38 @@ def make_sharded_train_step(cfg: TMConfig, mesh, *, engines=None,
             new_state = tm.update_batch_sequential(
                 cfg, state_l, xs, ys, rng, pol=pol_l, axis_name=CLAUSE_AXIS,
                 clause_start=start, mask=mask)
-        events = indexing.events_from_transition(
+        buf = indexing.events_from_transition(
             old_inc, include_mask(cfg, new_state), max_events)
         new_caches = {k: cache_provider(k).update_cache(
-                          cfg, caches_l[k], new_state, events) for k in keys}
-        return new_state, new_caches
+                          cfg, caches_l[k], new_state, buf.events)
+                      for k in keys}
+        # per-shard drop counts add over the clause axis (each model shard
+        # diffs only its own include slice; data ranks see identical diffs),
+        # yielding the replicated global overflow counter — an all-reduce,
+        # never a gather, per the step's collective contract
+        overflow = overflow_in + jax.lax.psum(buf.overflow, CLAUSE_AXIS)
+        return new_state, new_caches, overflow
 
     mask_spec = y_spec  # batch-sharded in parallel mode, replicated otherwise
     sm = shard_map_compat(
         local_fn, mesh=mesh,
         in_specs=(STATE_PSPEC, cache_specs, P(CLAUSE_AXIS), x_spec, y_spec,
-                  P(None), mask_spec),
-        out_specs=(STATE_PSPEC, cache_specs))
+                  P(None), mask_spec, P()),
+        out_specs=(STATE_PSPEC, cache_specs, P()))
     donate_nums = (0, 1) if resolve_donate(donate) else ()
     fn = jax.jit(sm, donate_argnums=donate_nums)
 
     def step(bundle: TMBundle, xs, ys, rng, mask=None) -> TMBundle:
         if mask is None:
             mask = jnp.ones(xs.shape[0], bool)
-        new_state, new_caches = fn(bundle.state, bundle.caches, pol, xs, ys,
-                                   jax.random.key_data(rng), mask)
-        return TMBundle(cfg=cfg, state=new_state, caches=new_caches)
+        overflow_in = (bundle.event_overflow
+                       if bundle.event_overflow is not None
+                       else jnp.zeros((), jnp.int32))
+        new_state, new_caches, overflow = fn(
+            bundle.state, bundle.caches, pol, xs, ys,
+            jax.random.key_data(rng), mask, overflow_in)
+        return TMBundle(cfg=cfg, state=new_state, caches=new_caches,
+                        event_overflow=overflow)
 
     # exposed for the dry-run's HLO assertions (launch/dryrun.py --tm)
     step.jitted, step.pol, step.composes_data_axis = fn, pol, compose

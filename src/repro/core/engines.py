@@ -13,10 +13,14 @@ falsification index, Gorji et al. 2020); the Massively Parallel TM line
     boundary crossings *incrementally* so learning never rebuilds or
     host-syncs a cache per step.
   * ``register_engine`` / ``get_engine`` / ``registered_engines`` — the
-    registry. ``dense``, ``bitpack`` (Pallas), ``bitpack_xla``, ``compact``
-    and ``indexed`` register at import; new engines (sharded, weighted, …)
+    registry. ``dense``, ``bitpack``, ``bitpack_xla``, ``compact`` and
+    ``indexed`` register at import; new engines (sharded, weighted, …)
     plug in without touching the estimator, the shim, the parity tests or
-    the benchmarks — all of which iterate the registry.
+    the benchmarks — all of which iterate the registry. Kernel-vs-XLA
+    *bodies* are no longer an engine property: the packed engine resolves
+    its evaluation through the kernel backend registry
+    (``kernels/backend.py``, selected by ``cfg.backend``), and
+    ``bitpack_xla`` is just ``bitpack`` pinned to ``backend='xla'``.
 
 Engines that derive the *same* cache share it via ``cache_key`` (``bitpack``
 and ``bitpack_xla`` both read the packed include words), so a ``TMBundle``
@@ -40,10 +44,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import indexing, tm
-from repro.core.bitpack import WORD, pack_bits
+from repro.core.bitpack import WORD, pack_bits, packed_literals
 from repro.core.indexing import Event
-from repro.core.types import TMConfig, TMState, include_mask
-from repro.kernels import ops as kops
+from repro.core.types import (
+    TMConfig, TMState, clause_polarity, include_mask)
+from repro.kernels import backend as kbackend
 
 # Mesh axis name the clause dimension shards over (production meshes call
 # their tensor axis "model"; clauses are the TM's model dimension).
@@ -221,8 +226,30 @@ def packed_include_apply_events(words: jax.Array, events: Event) -> jax.Array:
     return words.at[events.cls, events.clause, word].add(delta, mode="drop")
 
 
-class _PackedEngineBase(EvalEngine):
+class BitpackEngine(EvalEngine):
+    """32×-packed include words, evaluated through the kernel backend
+    registry (``kernels/backend.py``): the ``clause_votes`` primitive
+    resolves ``cfg.backend`` into the fused Pallas eval+vote kernel or its
+    XLA reference body — the same resolution single-device and as the
+    shard-local evaluator under shard_map (the kernel takes the shard's
+    local ±1 polarity slice; partial votes add across shards, one psum).
+
+    ``bitpack_xla`` is a registry *alias*: the same engine pinned to
+    ``backend='xla'`` regardless of the config (it shares the ``bitpack``
+    cache slot, so a bundle maintains the packed words once).
+    """
+
     cache_key = "bitpack"
+    name = "bitpack"
+
+    def __init__(self, name: str | None = None,
+                 backend: str | None = None):
+        if name is not None:
+            self.name = name
+        self.backend = backend  # None → resolve cfg.backend
+
+    def _votes(self, cfg: TMConfig):
+        return kbackend.resolve("clause_votes", self.backend or cfg.backend)
 
     def prepare(self, cfg: TMConfig, state: TMState) -> jax.Array:
         return pack_bits(include_mask(cfg, state).astype(jnp.uint8))
@@ -234,34 +261,12 @@ class _PackedEngineBase(EvalEngine):
     def cache_pspec(self, cfg):
         return P(None, CLAUSE_AXIS, None)                     # (m, n, W)
 
+    def scores(self, cfg, cache, x):
+        return self._votes(cfg)(cache, packed_literals(x),
+                                clause_polarity(cfg))
+
     def partial_scores(self, cfg, cache, x, pol):
-        # XLA body as the shard-local evaluator for *both* packed engines:
-        # a Pallas call needs an explicit partitioning rule to live under
-        # shard_map; the packed layout is identical, so on TPU the kernel
-        # slots in here once its sharding rule is registered (DESIGN.md §6).
-        return _partial_votes(tm.packed_clause_outputs(cache, x), pol)
-
-
-class BitpackEngine(_PackedEngineBase):
-    """Fused Pallas eval+vote kernel over the packed words."""
-
-    name = "bitpack"
-
-    def __init__(self, interpret: bool = True):
-        # interpret-mode on CPU containers; pass False on real TPUs
-        self.interpret = interpret
-
-    def scores(self, cfg, cache, x):
-        return kops.tm_votes_packed(cache, x, interpret=self.interpret)
-
-
-class BitpackXLAEngine(_PackedEngineBase):
-    """Same packed layout, pure-XLA evaluation (CPU-executable fast path)."""
-
-    name = "bitpack_xla"
-
-    def scores(self, cfg, cache, x):
-        return tm.bitpacked_scores_packed(cfg, cache, x)
+        return self._votes(cfg)(cache, packed_literals(x), pol)
 
 
 # ---------------------------------------------------------------------------
@@ -334,6 +339,7 @@ class IndexedEngine(EvalEngine):
 
 register_engine(DenseEngine())
 register_engine(BitpackEngine())
-register_engine(BitpackXLAEngine())
+# registry alias: same engine + cache, backend pinned to the XLA body
+register_engine(BitpackEngine(name="bitpack_xla", backend="xla"))
 register_engine(CompactEngine())
 register_engine(IndexedEngine())

@@ -187,10 +187,26 @@ def apply_events(index: ClauseIndex, events: Event) -> ClauseIndex:
     return out
 
 
+class EventBuffer(NamedTuple):
+    """A fixed-capacity masked event buffer + its overflow counter.
+
+    ``overflow`` counts the boundary crossings that did **not** fit in the
+    buffer — dropped events leave every derived cache silently stale, so a
+    non-zero counter is a config error (``max_events`` too small for the
+    batch). The counter makes that failure observable for the cost of one
+    scalar: callers assert ``overflow == 0`` after a step instead of sizing
+    buffers to the ``n_classes·n_clauses·n_literals`` worst case up front
+    (``TMBundle.event_overflow`` accumulates it across steps).
+    """
+
+    events: Event       # (max_events,) leaves
+    overflow: jax.Array # () int32 — changed cells beyond capacity
+
+
 def events_from_transition(
     old_include: jax.Array, new_include: jax.Array, max_events: int
-) -> Event:
-    """Diff two include masks into a fixed-capacity event buffer.
+) -> EventBuffer:
+    """Diff two include masks into a fixed-capacity counted event buffer.
 
     Used by the learning loop to keep the index in sync after feedback:
     the TM updates states densely (TPU-friendly), then the index absorbs
@@ -207,12 +223,16 @@ def events_from_transition(
     cls, rem = jnp.divmod(sel, n * L)
     clause, literal = jnp.divmod(rem, L)
     is_insert = new_include.reshape(-1)[sel]
-    return Event(
-        cls=cls.astype(jnp.int32),
-        clause=clause.astype(jnp.int32),
-        literal=literal.astype(jnp.int32),
-        is_insert=is_insert,
-        valid=valid,
+    total = jnp.sum(flat, dtype=jnp.int32)
+    return EventBuffer(
+        events=Event(
+            cls=cls.astype(jnp.int32),
+            clause=clause.astype(jnp.int32),
+            literal=literal.astype(jnp.int32),
+            is_insert=is_insert,
+            valid=valid,
+        ),
+        overflow=jnp.maximum(total - max_events, 0).astype(jnp.int32),
     )
 
 

@@ -58,12 +58,18 @@ class Topology:
                          (None → every registered engine).
     ``donate``         — train steps donate the input bundle's buffers
                          (None → wherever the backend implements donation).
+    ``backend``        — kernel backend the TM primitives resolve through
+                         (``kernels/backend.py``): ``'auto'`` | ``'xla'`` |
+                         ``'pallas'`` | ``'pallas_interpret'``; None defers
+                         to ``TMConfig.backend``. Placement and kernel
+                         choice are declared in one spot and resolved once.
     """
 
     clause_shards: int = 1
     data_shards: int = 1
     engines: tuple[str, ...] | None = None
     donate: bool | None = None
+    backend: str | None = None
 
     def __post_init__(self):
         if self.clause_shards < 1 or self.data_shards < 1:
@@ -72,6 +78,12 @@ class Topology:
                 f"{self.clause_shards}, data_shards={self.data_shards}")
         if self.engines is not None and not isinstance(self.engines, tuple):
             object.__setattr__(self, "engines", tuple(self.engines))
+        if self.backend is not None:
+            from repro.kernels.backend import BACKENDS
+            if self.backend not in BACKENDS:
+                raise ValueError(
+                    f"unknown kernel backend {self.backend!r}; one of "
+                    f"{BACKENDS}")
 
     @property
     def n_devices(self) -> int:
@@ -124,8 +136,14 @@ class TMSession:
                     f"call says {tuple(engines)}")
             topology = dataclasses.replace(topology, engines=tuple(engines))
         if mesh is not None:
-            topology = _topology_of_mesh(mesh, topology.engines,
-                                         topology.donate)
+            adopted = _topology_of_mesh(mesh, topology.engines,
+                                        topology.donate)
+            topology = dataclasses.replace(adopted, backend=topology.backend)
+        if topology.backend is not None and topology.backend != cfg.backend:
+            # the topology's kernel choice wins: everything downstream —
+            # engines, the training round, the shard_map factories — reads
+            # cfg.backend, so resolve the override into the config once here
+            cfg = dataclasses.replace(cfg, backend=topology.backend)
         self.cfg = cfg
         self.topology = topology
         self.parallel = parallel
@@ -172,8 +190,10 @@ class TMSession:
         return NamedSharding(self.mesh, STATE_PSPEC.ta_state)
 
     def describe(self) -> dict:
+        from repro.kernels.backend import resolve_backend
         d = self.topology.describe()
         d["sharded"] = self.is_sharded
+        d["backend"] = resolve_backend(self.cfg.backend)
         return d
 
     # -- bundle lifecycle ---------------------------------------------------
@@ -269,10 +289,10 @@ class TsetlinMachine:
         max_events_per_batch: int = 4096,
         seed: int = 0,
     ):
-        self.cfg = cfg
         self.session = TMSession(cfg, topology, engines=engines,
                                  parallel=parallel,
                                  max_events=max_events_per_batch)
+        self.cfg = self.session.cfg  # topology backend override resolved in
         self.engines = self.session.engines
         self.parallel = parallel
         self.max_events_per_batch = max_events_per_batch
@@ -359,6 +379,27 @@ class TsetlinMachine:
             (self.predict(xs, engine=engine) == ys).astype(jnp.float32)))
 
     # -- state access / persistence -----------------------------------------
+
+    @property
+    def event_overflow(self) -> int:
+        """Cache-sync events dropped since the bundle was prepared.
+
+        Non-zero means ``max_events_per_batch`` was too small for some step
+        and the engine caches are stale mirrors — a config error. Checking
+        costs one scalar device read, so callers can assert
+        ``machine.event_overflow == 0`` after every step (or epoch) instead
+        of sizing the buffer to the ``n_classes·n_clauses·n_literals``
+        worst case up front. Note the buffer is per clause shard
+        (DESIGN.md §6): a sharded topology holds ``clause_shards ×
+        max_events_per_batch`` crossings in total, so size the buffer for
+        the placement with the *fewest* clause shards you intend to run —
+        a limit that held on ``Topology(clause_shards=4)`` may overflow on
+        ``Topology(1)``.
+        """
+        bundle = self.bundle
+        if bundle is None or bundle.event_overflow is None:
+            return 0
+        return int(jax.device_get(bundle.event_overflow))
 
     @property
     def state(self) -> TMState:

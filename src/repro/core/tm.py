@@ -2,7 +2,8 @@
 
 Evaluation paths (all semantically identical; cross-validated in tests):
   * ``dense_clause_outputs``   — exhaustive evaluation, the paper's baseline.
-  * ``bitpacked`` (kernels/)   — dense over 32x packed words (VPU-friendly).
+  * packed words (kernels/backend.py) — dense over 32x packed words
+    (VPU-friendly), XLA or Pallas body per ``cfg.backend``.
   * ``compact_eval`` (indexing.py) — gather over included literals only;
     work ∝ Σ clause lengths (the paper's sparsity).
   * ``indexed_scores`` (indexing.py) — the paper's falsification index.
@@ -71,46 +72,9 @@ def predict(cfg: TMConfig, state: TMState, x: jax.Array) -> jax.Array:
     return jnp.argmax(scores(cfg, state, x), axis=-1)
 
 
-def packed_clause_outputs(include_packed: jax.Array, x: jax.Array) -> jax.Array:
-    """(m, n, W) packed includes + (B, o) inputs → (B, m, n) bool outputs.
-
-    Pure-XLA packed eval body, shared by the XLA score paths and the packed
-    engines' shard-local ``partial_scores`` (Eq. 4 semantics: a clause is
-    true iff no included literal is violated).
-    """
-    from repro.core.bitpack import packed_literals
-
-    lit = packed_literals(x)                                     # (B,W)
-    viol = include_packed[None] & (~lit)[:, None, None]          # (B,m,n,W)
-    return ~jnp.any(viol != 0, axis=-1)                          # (B,m,n)
-
-
-def bitpacked_scores_packed(
-    cfg: TMConfig, include_packed: jax.Array, x: jax.Array
-) -> jax.Array:
-    """XLA bit-packed eval from a *prepared* packed-include cache.
-
-    ``include_packed``: (m, n, W) uint32 — e.g. the ``bitpack`` engine cache
-    kept in sync event-wise by the registry (core/engines.py), so inference
-    never repacks the full include mask.
-    """
-    out = packed_clause_outputs(include_packed, x)
-    return clause_votes(cfg, out.astype(jnp.uint8))
-
-
-def bitpacked_scores(cfg: TMConfig, state: TMState, x: jax.Array) -> jax.Array:
-    """Dense eval over 32×-packed words, pure XLA (no Pallas).
-
-    Same algorithm as kernels/clause_eval.py — on CPU this is the
-    executable fast path (interpret-mode Pallas runs the kernel body in
-    Python); on TPU the Pallas kernel owns the fused-vote variant.
-    Memory traffic vs the f32-matmul dense baseline drops ~128×
-    (uint32 words vs f32 per literal).
-    """
-    from repro.core.bitpack import pack_bits
-
-    inc = pack_bits(include_mask(cfg, state).astype(jnp.uint8))  # (m,n,W)
-    return bitpacked_scores_packed(cfg, inc, x)
+# The packed-word evaluation bodies (XLA reference + Pallas kernel) live in
+# kernels/backend.py — the packed engine resolves them per cfg.backend, so
+# this module carries only the dense baseline and the learning semantics.
 
 
 # ---------------------------------------------------------------------------
@@ -152,42 +116,31 @@ def _slice_rands(rands: FeedbackRands, start: jax.Array,
     )
 
 
-def _type_i_delta(
-    cfg: TMConfig,
-    clause_out: jax.Array,  # (n,) uint8 — evaluated with empty_output=1
-    lit: jax.Array,         # (2o,) uint8
-    include: jax.Array,     # (n, 2o) bool
-    u: jax.Array,           # (n, 2o) uniforms
-) -> jax.Array:
-    """Type I feedback state deltas (n, 2o) int16 — combats false negatives.
+def _round_clause_outputs(cfg: TMConfig, ta_row: jax.Array,
+                          lit: jax.Array, mode: str) -> jax.Array:
+    """(n,) uint8 clause outputs of one class row (learning semantics:
+    empty clauses → 1), through the backend-resolved evaluation body.
 
-    clause==1, lit==1 : +1 w.p. (s-1)/s   (or w.p. 1 if boost_true_positive)
-    clause==1, lit==0 : -1 w.p. 1/s
-    clause==0         : -1 w.p. 1/s   (all literals)
+    ``mode`` is a *concrete* backend (``kernels/backend.resolve_backend``).
+    The XLA body is the dense float-einsum falsification count; the Pallas
+    body packs the row's include mask on the fly (a cheap VPU reshape-sum)
+    and runs the bit-packed clause-output kernel — the first stage of the
+    fused training round, so the (n, 2o) include mask never feeds a dense
+    einsum and the clause outputs stream straight into the ``ta_update``
+    kernel. Both bodies are bit-exact (same falsification predicate).
     """
-    del include  # Type I acts on states regardless of current action
-    inv_s = 1.0 / cfg.s
-    c1 = (clause_out == 1)[:, None]                   # (n, 1)
-    l1 = (lit == 1)[None, :]                          # (1, 2o)
-    p_reward = 1.0 if cfg.boost_true_positive else (1.0 - inv_s)
-    reward = c1 & l1 & (u < p_reward)
-    penalty = ((c1 & ~l1) | ~c1) & (u < inv_s)
-    return reward.astype(jnp.int16) - penalty.astype(jnp.int16)
-
-
-def _type_ii_delta(
-    cfg: TMConfig,
-    clause_out: jax.Array,  # (n,)
-    lit: jax.Array,         # (2o,)
-    include: jax.Array,     # (n, 2o)
-) -> jax.Array:
-    """Type II feedback deltas (n, 2o) int16 — combats false positives.
-
-    clause==1, lit==0, action==exclude : +1 (deterministic)
-    """
-    c1 = (clause_out == 1)[:, None]
-    l0 = (lit == 0)[None, :]
-    return (c1 & l0 & ~include).astype(jnp.int16)
+    include = ta_row > cfg.n_states
+    if mode == "xla":
+        false_cnt = jnp.einsum(
+            "k,nk->n", (1 - lit).astype(jnp.float32),
+            include.astype(jnp.float32))
+        return (false_cnt < 0.5).astype(jnp.uint8)
+    from repro.core.bitpack import pack_bits
+    from repro.kernels import backend as kbackend
+    outputs = kbackend.resolve("clause_outputs", mode)
+    inc_packed = pack_bits(include.astype(jnp.uint8))[None]   # (1, n, W)
+    lit_packed = pack_bits(lit.astype(jnp.uint8)[None])       # (1, W)
+    return outputs(inc_packed, lit_packed)[0, 0].astype(jnp.uint8)
 
 
 def _class_round(
@@ -210,12 +163,18 @@ def _class_round(
     per-class vote is the *only* cross-shard quantity (one psum — the vote
     all-reduce of the Massively Parallel TM architecture); Type I/II feedback
     is clause-local given that vote.
+
+    Both halves of the round resolve through the kernel backend registry
+    (``cfg.backend``): clause evaluation (``clause_outputs``) and feedback
+    application (``ta_update``). On the Pallas backends this is the fused
+    training round — packed-word clause outputs piped into the ``ta_update``
+    kernel with only the scalar vote in between, bit-exact with the XLA
+    bodies (tests/test_kernel_backends.py pins it in both learning modes).
     """
-    include = ta_row > cfg.n_states
-    false_cnt = jnp.einsum(
-        "k,nk->n", (1 - lit).astype(jnp.float32), include.astype(jnp.float32)
-    )
-    clause_out = (false_cnt < 0.5).astype(jnp.uint8)  # empty clause ⇒ 1 (learning)
+    from repro.kernels import backend as kbackend
+
+    mode = kbackend.resolve_backend(cfg.backend)
+    clause_out = _round_clause_outputs(cfg, ta_row, lit, mode)
     if pol is None:
         pol = clause_polarity(cfg)
     t = float(cfg.threshold)
@@ -230,13 +189,12 @@ def _class_round(
     # target round: positive clauses→Type I, negative→Type II; swapped otherwise
     gets_type_i = jnp.where(positive_round, pos_pol, ~pos_pol)
 
-    d1 = _type_i_delta(cfg, clause_out, lit, include, rands.type_i)
-    d2 = _type_ii_delta(cfg, clause_out, lit, include)
-    delta = jnp.where(
-        (active & gets_type_i)[:, None], d1,
-        jnp.where((active & ~gets_type_i)[:, None], d2, 0),
-    ).astype(jnp.int16)
-    return jnp.clip(ta_row + delta, 1, 2 * cfg.n_states).astype(cfg.state_dtype)
+    apply_feedback = kbackend.resolve("ta_update", mode)
+    new_row = apply_feedback(
+        ta_row.astype(jnp.int16), lit, clause_out, gets_type_i, active,
+        rands.type_i, n_states=cfg.n_states, s=cfg.s,
+        boost_true_positive=cfg.boost_true_positive)
+    return new_row.astype(cfg.state_dtype)
 
 
 def update_sample(

@@ -42,10 +42,21 @@ class TMConfig:
     # capacity factors).
     index_capacity: int | None = None
     clause_capacity: int | None = None
+    # Kernel backend the TM primitives (clause_votes / clause_outputs /
+    # ta_update) resolve through kernels/backend.py: 'auto' picks Pallas on
+    # TPU and the XLA reference bodies elsewhere; 'pallas_interpret' runs the
+    # kernel bodies through the Pallas interpreter (CI / debugging). Purely
+    # an execution detail — results are bit-exact across backends, and the
+    # checkpoint fingerprint ignores it.
+    backend: str = "auto"
 
     def __post_init__(self):
         if self.n_clauses % 2:
             raise ValueError("n_clauses must be even (half per polarity)")
+        from repro.kernels.backend import BACKENDS  # kernels/ is core-free
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown kernel backend {self.backend!r}; one of {BACKENDS}")
         if self.empty_clause_output not in (0, 1):
             raise ValueError("empty_clause_output must be 0 or 1")
         if self.index_capacity is not None and self.index_capacity < 1:

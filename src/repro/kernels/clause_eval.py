@@ -42,11 +42,12 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _votes_kernel(inc_ref, lit_ref, o_ref, *, half: int, n_clauses: int):
+def _votes_kernel(inc_ref, lit_ref, pol_ref, o_ref):
     """Grid (B_tiles, m, n_tiles); j = clause-tile index iterates fastest.
 
     inc_ref: (1, CLAUSE_TILE, W)   uint32 — include masks of clause tile
     lit_ref: (BATCH_TILE, W)       uint32 — packed literals
+    pol_ref: (1, CLAUSE_TILE)      int32  — ±1 clause polarity (0 = padding)
     o_ref:   (BATCH_TILE, 1)       int32  — votes, accumulated over j
     """
     j = pl.program_id(2)
@@ -60,12 +61,10 @@ def _votes_kernel(inc_ref, lit_ref, o_ref, *, half: int, n_clauses: int):
     # violation: included literal that is false
     viol = inc[None, :, :] & (~lit)[:, None, :]         # (Bt, Ct, W)
     falsified = jnp.any(viol != 0, axis=-1)             # (Bt, Ct)
-    # polarity of the global clause index (first half positive — Eq. 2/3)
-    idx = j * CLAUSE_TILE + jax.lax.broadcasted_iota(
-        jnp.int32, (1, CLAUSE_TILE), 1
-    )                                                   # (1, Ct)
-    sign = jnp.where(idx < half, 1, -1)
-    sign = jnp.where(idx < n_clauses, sign, 0)          # clause padding → 0
+    # polarity arrives as data (not recomputed from the global clause id),
+    # so a clause shard passes its local ±1 slice and the kernel is
+    # placement-agnostic; clause padding carries sign 0
+    sign = pol_ref[0][None, :]                          # (1, Ct)
     votes = jnp.sum(jnp.where(falsified, 0, sign), axis=1, dtype=jnp.int32)
     o_ref[...] += votes[:, None]
 
@@ -74,10 +73,16 @@ def _votes_kernel(inc_ref, lit_ref, o_ref, *, half: int, n_clauses: int):
 def clause_votes_packed(
     include_packed: jax.Array,  # (m, n, W) uint32
     lit_packed: jax.Array,      # (B, W) uint32
+    pol: jax.Array,             # (n,) int32 ±1 clause polarity
     *,
     interpret: bool = True,
 ) -> jax.Array:
     """Fused bit-packed clause evaluation + polarity vote: (B, m) int32.
+
+    ``pol`` is the ±1 vote sign per clause *row of this tensor* — the global
+    polarity single-device, the shard's local slice under shard_map (where
+    the returned votes are partial sums completed by one psum over the
+    clause axis — the registry's ``clause_votes`` partitioning contract).
 
     Padding invariants: include words beyond 2o are 0 (never falsify);
     literal words beyond 2o may be anything (ANDed against 0 includes);
@@ -85,25 +90,26 @@ def clause_votes_packed(
     """
     m, n, w = include_packed.shape
     b = lit_packed.shape[0]
-    half = n // 2
 
     inc = _pad_to(_pad_to(include_packed, 2, LANE), 1, CLAUSE_TILE)
     lit = _pad_to(_pad_to(lit_packed, 1, LANE), 0, BATCH_TILE)
+    polp = _pad_to(pol.astype(jnp.int32)[None, :], 1, CLAUSE_TILE)
     n_pad, w_pad = inc.shape[1], inc.shape[2]
     b_pad = lit.shape[0]
 
     grid = (b_pad // BATCH_TILE, m, n_pad // CLAUSE_TILE)
     out = pl.pallas_call(
-        functools.partial(_votes_kernel, half=half, n_clauses=n),
+        _votes_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, CLAUSE_TILE, w_pad), lambda bb, i, j: (i, j, 0)),
             pl.BlockSpec((BATCH_TILE, w_pad), lambda bb, i, j: (bb, 0)),
+            pl.BlockSpec((1, CLAUSE_TILE), lambda bb, i, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((BATCH_TILE, 1), lambda bb, i, j: (bb, i)),
         out_shape=jax.ShapeDtypeStruct((b_pad, m), jnp.int32),
         interpret=interpret,
-    )(inc, lit)
+    )(inc, lit, polp)
     return out[:b]
 
 

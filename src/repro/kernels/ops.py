@@ -1,8 +1,12 @@
-"""Public jit'd wrappers around the Pallas TM kernels.
+"""Public jit'd wrappers around the TM kernel primitives.
 
-``interpret=True`` (default on this CPU container) executes kernel bodies in
-Python via the Pallas interpreter; on a real TPU pass ``interpret=False``.
-The wrappers own the packing step so callers deal in TM-native tensors.
+Thin conveniences over the kernel backend registry (``kernels/backend.py``):
+each wrapper resolves its primitive at the *kernel-forcing* mode by default
+(``backend.pallas_mode()`` — compiled Pallas on TPU, the interpreter on CPU
+containers), so these are the entry points that always exercise the kernel
+bodies (tests, benchmarks on TPU). Pass ``backend='xla'`` (or any registry
+backend string) to override. The wrappers own the packing step so callers
+deal in TM-native tensors.
 """
 from __future__ import annotations
 
@@ -12,8 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bitpack import pack_bits, packed_literals
-from repro.core.types import TMConfig, TMState, include_mask
-from repro.kernels import clause_eval, ta_update as ta_update_mod
+from repro.core.types import TMConfig, TMState, clause_polarity, include_mask
+from repro.kernels import backend as kbackend
 
 
 def pack_include(cfg: TMConfig, state: TMState) -> jax.Array:
@@ -21,9 +25,13 @@ def pack_include(cfg: TMConfig, state: TMState) -> jax.Array:
     return pack_bits(include_mask(cfg, state).astype(jnp.uint8))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _mode(backend: str | None) -> str:
+    return kbackend.pallas_mode() if backend is None else backend
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
 def tm_votes_packed(
-    include_packed: jax.Array, x: jax.Array, *, interpret: bool = True
+    include_packed: jax.Array, x: jax.Array, *, backend: str | None = None
 ) -> jax.Array:
     """(m, n, W) packed includes + (B, o) inputs → (B, m) votes.
 
@@ -31,35 +39,36 @@ def tm_votes_packed(
     packed include words are maintained incrementally across learning steps,
     so the kernel wrapper never repacks the full include mask per call.
     """
-    lit = packed_literals(x)
-    return clause_eval.clause_votes_packed(include_packed, lit,
-                                           interpret=interpret)
+    votes = kbackend.resolve("clause_votes", _mode(backend))
+    n = include_packed.shape[1]
+    pol = jnp.where(jnp.arange(n) < n // 2, 1, -1).astype(jnp.int32)
+    return votes(include_packed, packed_literals(x), pol)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
 def tm_votes(
-    cfg: TMConfig, state: TMState, x: jax.Array, *, interpret: bool = True
+    cfg: TMConfig, state: TMState, x: jax.Array, *, backend: str | None = None
 ) -> jax.Array:
-    """(B, o) inputs → (B, m) votes via the fused Pallas kernel."""
-    inc = pack_include(cfg, state)
-    return tm_votes_packed(inc, x, interpret=interpret)
+    """(B, o) inputs → (B, m) votes via the fused eval+vote primitive."""
+    votes = kbackend.resolve("clause_votes", _mode(backend))
+    return votes(pack_include(cfg, state), packed_literals(x),
+                 clause_polarity(cfg))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
 def tm_predict(
-    cfg: TMConfig, state: TMState, x: jax.Array, *, interpret: bool = True
+    cfg: TMConfig, state: TMState, x: jax.Array, *, backend: str | None = None
 ) -> jax.Array:
-    return jnp.argmax(tm_votes(cfg, state, x, interpret=interpret), axis=-1)
+    return jnp.argmax(tm_votes(cfg, state, x, backend=backend), axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
 def tm_clause_outputs(
-    cfg: TMConfig, state: TMState, x: jax.Array, *, interpret: bool = True
+    cfg: TMConfig, state: TMState, x: jax.Array, *, backend: str | None = None
 ) -> jax.Array:
     """(B, o) → (B, m, n) int8 clause outputs (learning semantics)."""
-    inc = pack_include(cfg, state)
-    lit = packed_literals(x)
-    return clause_eval.clause_outputs_packed(inc, lit, interpret=interpret)
+    outputs = kbackend.resolve("clause_outputs", _mode(backend))
+    return outputs(pack_include(cfg, state), packed_literals(x))
 
 
 def tm_ta_update(
@@ -71,11 +80,12 @@ def tm_ta_update(
     active: jax.Array,
     uniforms: jax.Array,
     *,
-    interpret: bool = True,
+    backend: str | None = None,
 ) -> jax.Array:
     """Kernel-backed Type I/II feedback for one class row."""
-    return ta_update_mod.ta_update(
+    update = kbackend.resolve("ta_update", _mode(backend))
+    return update(
         ta_row, lit, clause_out, gets_type_i, active, uniforms,
         n_states=cfg.n_states, s=cfg.s,
-        boost_true_positive=cfg.boost_true_positive, interpret=interpret,
+        boost_true_positive=cfg.boost_true_positive,
     )

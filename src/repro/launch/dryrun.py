@@ -102,6 +102,12 @@ def run_tm_checks(*, data: int = 2, model: int = 4, batch: int = 16,
     ``train_step`` may psum a vote per class round (+ delta reductions in
     parallel mode) but must never gather state or caches: every collective
     has to be an all-reduce.
+
+    Backend routes (DESIGN.md §8): the packed engine is additionally lowered
+    per kernel backend — under ``pallas_interpret`` the shard-local
+    evaluator must *be* the Pallas kernel (``pallas_call`` in the jaxpr)
+    while the program still contains only the single vote all-reduce; under
+    ``xla`` no kernel call may appear.
     """
     import jax.numpy as jnp
 
@@ -116,7 +122,8 @@ def run_tm_checks(*, data: int = 2, model: int = 4, batch: int = 16,
     mesh = make_host_mesh(data=data, model=model)
     bundle = make_sharded_prepare(cfg, mesh)(init_tm(cfg))
     xs = jnp.zeros((batch, cfg.n_features), jnp.uint8)
-    record: dict = {"mesh": f"{data}x{model}", "engines": {}, "failures": []}
+    record: dict = {"mesh": f"{data}x{model}", "engines": {},
+                    "backend_routes": {}, "failures": []}
 
     for name in registered_engines():
         eng = get_engine(name)
@@ -136,6 +143,32 @@ def run_tm_checks(*, data: int = 2, model: int = 4, batch: int = 16,
                 f"scores/{name}: expected exactly one vote all-reduce, got "
                 f"{coll.by_kind} (count={coll.count})")
 
+    # -- kernel backend routes for the packed engine ------------------------
+    pcache = bundle.caches[get_engine("bitpack").cache_key]
+    for backend in ("xla", "pallas_interpret"):
+        cfg_b = dataclasses.replace(cfg, backend=backend)
+        s = make_sharded_scores(cfg_b, mesh, engine="bitpack")
+        jaxpr = str(jax.make_jaxpr(s.jitted)(pcache, s.pol, xs))
+        kernel_routed = "pallas_call" in jaxpr
+        coll = hlo_mod.collective_stats(
+            s.jitted.lower(pcache, s.pol, xs).compile().as_text())
+        one_ar = coll.count == 1 and set(coll.by_kind) == {"all-reduce"}
+        want_kernel = backend != "xla"
+        ok = one_ar and kernel_routed == want_kernel
+        record["backend_routes"][backend] = {
+            "pallas_call_in_jaxpr": kernel_routed,
+            "collective_count": coll.count, "by_kind": coll.by_kind,
+            "one_vote_all_reduce": one_ar}
+        print(f"[tm] scores/bitpack[{backend}]: pallas_call={kernel_routed} "
+              f"collectives={coll.by_kind} count={coll.count} "
+              f"{'OK' if ok else 'FAIL'}", flush=True)
+        if not ok:
+            record["failures"].append(
+                f"scores/bitpack[{backend}]: expected "
+                f"{'the Pallas kernel' if want_kernel else 'the XLA body'} "
+                f"with one vote all-reduce, got pallas_call={kernel_routed}, "
+                f"{coll.by_kind} (count={coll.count})")
+
     for parallel in (False, True):
         step = make_sharded_train_step(cfg, mesh, parallel=parallel,
                                        max_events=1024)
@@ -143,8 +176,9 @@ def run_tm_checks(*, data: int = 2, model: int = 4, batch: int = 16,
         tys = jnp.zeros((train_batch,), jnp.int32)
         tmask = jnp.ones((train_batch,), bool)
         kd = jax.random.key_data(jax.random.key(0))
+        overflow0 = jnp.zeros((), jnp.int32)
         compiled = step.jitted.lower(bundle.state, bundle.caches, step.pol,
-                                     txs, tys, kd, tmask).compile()
+                                     txs, tys, kd, tmask, overflow0).compile()
         coll = hlo_mod.collective_stats(compiled.as_text())
         # sequential composes data×clause here (data axis > 1, divisible):
         # its clause-slice reassembly psum is an all-reduce too — the

@@ -201,14 +201,18 @@ def run_batch_axis_scaling(cfg: TMConfig, *, engine: str = "indexed",
                            rps: float = 2000.0,
                            policy: ServePolicy = ServePolicy(),
                            seed: int = 0, include_density: float = 0.08,
+                           backend: str | None = None,
                            reuse: dict | None = None) -> list[dict]:
     """The same load at 1, 2, … data shards: batch-axis scaling per device
     count (the scores path is communication-free over ``data``, so this is
     the ROADMAP's multi-device ``tm_serve`` measurement).
 
-    ``reuse`` maps a device count to an already-measured ``serve_engine``
-    record for the identical load (e.g. the caller's main record), so that
-    count is not benchmarked twice.
+    ``backend`` is the kernel backend of the *whole* sweep — it must match
+    the caller's serving backend, or the per-device-count rows would mix
+    kernel routes with incomparable magnitudes (interpret-mode Pallas vs
+    compiled XLA). ``reuse`` maps a device count to an already-measured
+    ``serve_engine`` record for the identical load *and backend* (e.g. the
+    caller's main record), so that count is not benchmarked twice.
     """
     if device_counts is None:
         device_counts, d = [], 1
@@ -220,7 +224,7 @@ def run_batch_axis_scaling(cfg: TMConfig, *, engine: str = "indexed",
         r = (reuse or {}).get(d)
         if r is None:
             rec = run(cfg, engines=(engine,),
-                      topology=Topology(data_shards=d),
+                      topology=Topology(data_shards=d, backend=backend),
                       n_requests=n_requests, rps=rps, policy=policy,
                       seed=seed, include_density=include_density)
             r = rec["engines"][engine]
@@ -247,6 +251,10 @@ def main() -> None:
                     help="serve data-sharded over this many devices "
                          "(default: all available)")
     ap.add_argument("--clause-shards", type=int, default=1)
+    from repro.kernels.backend import BACKENDS
+    ap.add_argument("--backend", default=None, choices=list(BACKENDS),
+                    help="kernel backend the TM primitives resolve through "
+                         "(kernels/backend.py; default: TMConfig's 'auto')")
     ap.add_argument("--no-scaling", action="store_true",
                     help="skip the per-device-count batch-axis sweep")
     ap.add_argument("--seed", type=int, default=0)
@@ -258,7 +266,9 @@ def main() -> None:
     n_dev = jax.local_device_count()
     if args.smoke:
         cfg = TMConfig(n_classes=4, n_clauses=64, n_features=48)
-        engines = ("indexed", "bitpack_xla")
+        # bitpack resolves through the kernel backend registry, so the smoke
+        # exercises whatever --backend selects (CI: pallas_interpret)
+        engines = ("indexed", "bitpack")
         n_requests, max_batch = 96, 8
     else:
         cfg = TMConfig(n_classes=args.classes, n_clauses=args.clauses,
@@ -276,7 +286,8 @@ def main() -> None:
     data_shards = (args.data_shards if args.data_shards is not None
                    else min(max(n_dev // args.clause_shards, 1), max_batch))
     topology = Topology(data_shards=data_shards,
-                        clause_shards=args.clause_shards)
+                        clause_shards=args.clause_shards,
+                        backend=args.backend)
     policy = ServePolicy(max_batch=max_batch, max_wait_ms=args.max_wait_ms)
     record = run(cfg, engines=engines, topology=topology,
                  n_requests=n_requests, rps=args.rps, policy=policy,
@@ -290,14 +301,16 @@ def main() -> None:
                  else None)
         record["batch_axis_scaling"] = run_batch_axis_scaling(
             cfg, engine=engines[0], n_requests=sweep_requests,
-            rps=args.rps, policy=policy, seed=args.seed, reuse=reuse)
+            rps=args.rps, policy=policy, seed=args.seed,
+            backend=args.backend, reuse=reuse)
 
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)
     topo = record["topology"]
     print(f"topology: {topo['data_shards']}×data · {topo['clause_shards']}"
           f"×clause on {record['devices']} devices "
-          f"({'sharded' if topo['sharded'] else 'single-device'} scores path)")
+          f"({'sharded' if topo['sharded'] else 'single-device'} scores "
+          f"path, backend={topo['backend']})")
     for name, r in record["engines"].items():
         lm = r["latency_ms"]
         tag = "  [SATURATED: offered load > capacity; percentiles are " \

@@ -230,14 +230,24 @@ def _moe_shard_map(p, xg, *, top_k, capacity, act, policy: Policy,
 
 def moe_block(p, x, *, top_k, capacity_factor, act="silu", policy: Policy,
               dispatch="sort", normalize=True, num_groups=None,
-              use_shard_map=True):
+              use_shard_map=True, dropless=False):
     """x: (B, S, d) → (out, aux). Groups = batch rows (GShard semantics);
-    shared experts (if any) always active."""
+    shared experts (if any) always active.
+
+    ``dropless=True`` sizes capacity to the per-group token count — no
+    token can ever overflow its expert (top-k experts are distinct, so an
+    expert receives at most T_g tokens/group). Inference (prefill + decode)
+    runs dropless: capacity dropping is a *training* regularizer, and a
+    prefill that drops tokens can never agree with step-by-step decode,
+    where each single-token group trivially fits (the mixtral
+    prefill↔decode consistency bug). Costs up to E/(cf·k)× more expert-FFN
+    buffer at prefill; decode (T_g = 1) is unchanged.
+    """
     b, s, d = x.shape
     g = num_groups or b
     tg = (b * s) // g
     e = p["router"].shape[-1]
-    capacity = max(1, int(capacity_factor * tg * top_k / e))
+    capacity = tg if dropless else max(1, int(capacity_factor * tg * top_k / e))
     xg = x.reshape(g, tg, d)
     if policy.active:
         xg = jax.lax.with_sharding_constraint(

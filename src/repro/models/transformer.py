@@ -110,10 +110,13 @@ def _attn_block_seq(p, cfg, policy, x, positions, cache, *, window, mixer,
     h = norm(p["norm2"], x)
     aux = jnp.zeros((), jnp.float32)
     if mixer == "moe":
+        # inference (prefill: cache is not None; decode) is dropless so the
+        # two cache paths route identically; training keeps capacity drops
         o, aux = moe_block(
             p["moe"], h, top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
             act=cfg.act, policy=policy, dispatch=cfg.moe_dispatch,
-            normalize=cfg.normalize_topk)
+            normalize=cfg.normalize_topk,
+            dropless=decode or cache is not None)
     else:
         o = mlp(p["mlp"], h, act=cfg.act, policy=policy)
     x = x + o

@@ -60,6 +60,7 @@ def make_tm_task(
     data_seed: int = 7,
     parallel: bool = False,
     max_events: int = 4096,
+    backend: str | None = None,
     metrics_engine: str | None = None,
     metrics_every: int = 1,
 ) -> TMTask:
@@ -67,7 +68,10 @@ def make_tm_task(
 
     Pass ``topology=Topology(clause_shards=..., data_shards=...)`` (or an
     explicit ``mesh`` to adopt) for the sharded path — the task itself is
-    placement-transparent.
+    placement-transparent. ``backend`` pins the kernel backend the session's
+    primitives resolve through (equivalent to ``Topology(backend=...)``;
+    training and the metrics pass both go through the session, so the task
+    never wires kernels itself).
 
     ``metrics_engine`` defaults to ``DEFAULT_ENGINE`` when that engine is
     among the maintained ones, else to the first requested engine — the
@@ -76,6 +80,9 @@ def make_tm_task(
     trainer's ``log_every``: inference through the metrics engine costs a
     full eval per batch, wasted on steps whose metrics are never logged).
     """
+    if backend is not None:
+        topology = dataclasses.replace(topology or Topology(),
+                                       backend=backend)
     session = TMSession(cfg, topology, mesh=mesh, engines=engines,
                         parallel=parallel, max_events=max_events)
     if metrics_engine is None:

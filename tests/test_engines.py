@@ -100,7 +100,7 @@ def _transition_events(seed):
     s0 = random_state(CFG, seed)
     s1 = random_state(CFG, 50 + seed)
     ev = events_from_transition(include_mask(CFG, s0),
-                                include_mask(CFG, s1), ALL_EVENTS)
+                                include_mask(CFG, s1), ALL_EVENTS).events
     return s0, s1, ev
 
 

@@ -53,8 +53,9 @@ def test_clause_votes_packed_matches_ref(shape):
     include, x = make_case(m, n, o, b, seed=hash(shape) % 2**31)
     lit = jnp.concatenate([x, 1 - x], axis=-1)
     want = kref.clause_votes_ref(include, lit)
+    pol = jnp.where(jnp.arange(n) < n // 2, 1, -1).astype(jnp.int32)
     got = clause_eval.clause_votes_packed(
-        pack_bits(include.astype(jnp.uint8)), packed_literals(x))
+        pack_bits(include.astype(jnp.uint8)), packed_literals(x), pol)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 

@@ -27,8 +27,9 @@ def test_votes_kernel_any_shape(m, n_half, o, b, density, seed):
     x = jnp.asarray(rng.integers(0, 2, (b, o)), jnp.uint8)
     lit = jnp.concatenate([x, 1 - x], axis=-1)
     want = kref.clause_votes_ref(include, lit)
+    pol = jnp.where(jnp.arange(n) < n_half, 1, -1).astype(jnp.int32)
     got = clause_eval.clause_votes_packed(
-        pack_bits(include.astype(jnp.uint8)), packed_literals(x))
+        pack_bits(include.astype(jnp.uint8)), packed_literals(x), pol)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
@@ -44,6 +45,7 @@ def test_votes_bounded_by_half_clauses(n_half, o, seed):
     rng = np.random.default_rng(seed)
     include = jnp.asarray(rng.uniform(size=(1, n, 2 * o)) < 0.3)
     x = jnp.asarray(rng.integers(0, 2, (4, o)), jnp.uint8)
+    pol = jnp.where(jnp.arange(n) < n_half, 1, -1).astype(jnp.int32)
     got = np.asarray(clause_eval.clause_votes_packed(
-        pack_bits(include.astype(jnp.uint8)), packed_literals(x)))
+        pack_bits(include.astype(jnp.uint8)), packed_literals(x), pol))
     assert np.abs(got).max() <= n_half

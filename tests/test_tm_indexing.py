@@ -119,8 +119,9 @@ def test_apply_events_masked_buffer():
     old_inc = include_mask(CFG, state0)
     new_inc = include_mask(CFG, state1)
     n_changed = int(np.asarray(old_inc != new_inc).sum())
-    events = events_from_transition(old_inc, new_inc, max_events=n_changed + 8)
-    idx = apply_events(empty_index(CFG, CAP), events)
+    buf = events_from_transition(old_inc, new_inc, max_events=n_changed + 8)
+    assert int(buf.overflow) == 0
+    idx = apply_events(empty_index(CFG, CAP), buf.events)
     checks = validate(CFG, state1, idx)
     for name, ok in checks.items():
         assert bool(ok), name
@@ -183,8 +184,8 @@ def test_compact_apply_events_equals_rebuild(seed):
     l_max = CFG.n_literals  # worst-case capacity
     comp = compact(CFG, state0, l_max)
     n_changed = int(np.asarray(old_inc != new_inc).sum())
-    events = events_from_transition(old_inc, new_inc, n_changed + 4)
-    got = compact_apply_events(comp, events)
+    buf = events_from_transition(old_inc, new_inc, n_changed + 4)
+    got = compact_apply_events(comp, buf.events)
     want = compact(CFG, state1, l_max)
     np.testing.assert_array_equal(np.asarray(got.lengths),
                                   np.asarray(want.lengths))
@@ -263,9 +264,10 @@ def test_index_sync_through_learning():
         old_inc = include_mask(cfg, state)
         state = update_batch_sequential(cfg, state, xs, ys, sub)
         new_inc = include_mask(cfg, state)
-        events = events_from_transition(old_inc, new_inc,
-                                        max_events=int(cfg.n_classes * cfg.n_clauses * cfg.n_literals))
-        idx = apply_events(idx, events)
+        buf = events_from_transition(old_inc, new_inc,
+                                     max_events=int(cfg.n_classes * cfg.n_clauses * cfg.n_literals))
+        assert int(buf.overflow) == 0
+        idx = apply_events(idx, buf.events)
         checks = validate(cfg, state, idx)
         for name, ok in checks.items():
             assert bool(ok), f"step {step}: {name}"

@@ -48,7 +48,8 @@ SCRIPT = textwrap.dedent("""
     ref = init_bundle(cfg, state=state)
     stm = TMSession(cfg, mesh=mesh, max_events=ALL)
     assert stm.describe() == {"clause_shards": 4, "data_shards": 2,
-                              "devices": 8, "sharded": True}, stm.describe()
+                              "devices": 8, "sharded": True,
+                              "backend": "xla"}, stm.describe()
     sb = stm.prepare(state)
 
     # ---- scores parity: every registered engine, bit-exact vs dense ----
