@@ -153,9 +153,14 @@ def backend_topology_sweep(*, engines=("bitpack", "indexed"),
 
     Backends come from the kernel registry (``kernels/backend.py``):
     ``xla`` and ``pallas_interpret`` everywhere, plus compiled ``pallas``
-    when this host is a TPU. Topologies: single-device always, plus a
-    4-way clause-sharded placement when the host exposes ≥ 4 devices (CI
-    forces 4 via ``--xla_force_host_platform_device_count``). Interpret-mode
+    when this host is a TPU. Topologies: single-device always, plus — when
+    the host exposes ≥ 4 devices (CI forces 4 via
+    ``--xla_force_host_platform_device_count``) — a 4-way clause-sharded
+    placement and a **ragged** 2×2 data×clause placement on a smaller
+    clause count whose per-shard slice does not divide by the data ranks
+    (``composition='composed_ragged'``, DESIGN.md §9), so the composed
+    hierarchical route is timed alongside the even ones. Every row records
+    its ``data_shards`` and the fired ``composition`` rule. Interpret-mode
     rows measure the *route* (they execute the kernel body in Python, so
     their magnitudes are not comparable to compiled rows — recorded for
     completeness, compared only like-for-like across PRs).
@@ -167,13 +172,20 @@ def backend_topology_sweep(*, engines=("bitpack", "indexed"),
         backends = ("xla", "pallas_interpret")
         if jax.default_backend() == "tpu":
             backends += ("pallas",)
-    shard_grid = [1]
-    if jax.local_device_count() >= 4:
-        shard_grid.append(4)
-
     cfg0 = TMConfig(n_classes=10, n_clauses=256, n_features=196)
-    state = synthetic_trained_state(
-        dataclasses.replace(cfg0, backend="xla"), 58.0, seed)
+    # clause_shards=2 → n_local=65; data_shards=2 does not divide it →
+    # the previously-replicated shape that now composes raggedly
+    cfg_ragged = dataclasses.replace(cfg0, n_clauses=130)
+    topo_grid = [(cfg0, Topology())]
+    if jax.local_device_count() >= 4:
+        topo_grid.append((cfg0, Topology(clause_shards=4)))
+        topo_grid.append((cfg_ragged, Topology(clause_shards=2,
+                                               data_shards=2)))
+
+    states = {
+        c.n_clauses: synthetic_trained_state(
+            dataclasses.replace(c, backend="xla"), 58.0, seed)
+        for c, _ in topo_grid}
     rng = np.random.default_rng(seed)
     xs = jnp.asarray(rng.integers(0, 2, (n_eval, cfg0.n_features)), jnp.uint8)
     txs = jnp.asarray(rng.integers(0, 2, (n_train, cfg0.n_features)),
@@ -183,14 +195,14 @@ def backend_topology_sweep(*, engines=("bitpack", "indexed"),
 
     rows = []
     for backend in backends:
-        cfg = dataclasses.replace(cfg0, backend=backend)
-        for shards in shard_grid:
+        for cfg_base, topo in topo_grid:
+            cfg = dataclasses.replace(cfg_base, backend=backend)
             for engine in engines:
                 # donate=False: the timing loop reuses one bundle across reps
-                session = TMSession(cfg, Topology(clause_shards=shards,
-                                                  engines=(engine,),
-                                                  donate=False))
-                bundle = session.prepare(state)
+                session = TMSession(
+                    cfg, dataclasses.replace(topo, engines=(engine,),
+                                             donate=False))
+                bundle = session.prepare(states[cfg.n_clauses])
                 fn = lambda b, x: session.scores(b, x, engine=engine)
                 t_inf = _timeit(fn, bundle, xs)
                 t_tr = _timeit(
@@ -199,7 +211,10 @@ def backend_topology_sweep(*, engines=("bitpack", "indexed"),
                 rows.append({
                     "engine": engine,
                     "backend": kbackend.resolve_backend(backend),
-                    "clause_shards": shards,
+                    "n_clauses": cfg.n_clauses,
+                    "clause_shards": topo.clause_shards,
+                    "data_shards": topo.data_shards,
+                    "composition": session.describe()["composition"],
                     "devices": jax.local_device_count(),
                     "infer_us": t_inf / n_eval * 1e6,
                     "train_us": t_tr / n_train * 1e6,
@@ -224,7 +239,8 @@ def print_sweep(sweep: list[dict], prefix: str = "sweep") -> None:
     """One line per backend-sweep row (shared by main and benchmarks/run.py)."""
     for r in sweep:
         print(f"{prefix}/{r['engine']}/{r['backend']}"
-              f"/shards{r['clause_shards']}: "
+              f"/c{r['clause_shards']}xd{r['data_shards']}"
+              f"[{r['composition']}]: "
               f"infer={r['infer_us']:.2f}us train={r['train_us']:.2f}us")
 
 

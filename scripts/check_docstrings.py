@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Docstring gate for the public TM surface (wired into scripts/ci.sh).
+
+Walks the listed modules with ``ast`` (stdlib only — no imports of the
+checked code, no new dependencies) and requires a docstring on:
+
+  * the module itself,
+  * every public top-level function and class,
+  * every public method of a public class.
+
+"Public" means the name has no leading underscore (dunders like
+``__init__`` are skipped too — their contract is the class docstring).
+A method may inherit its docstring: if any base class *named in the
+checked module set* defines the same method with a docstring, the
+override passes (the registry engines document the contract once on
+``EvalEngine``; per-engine overrides would only repeat it).
+
+Exit status 1 lists every missing docstring as ``path:line name``.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+# The public surface the README points users at (ISSUE 5 satellite):
+MODULES = [
+    "src/repro/core/api.py",
+    "src/repro/core/session.py",
+    "src/repro/core/engines.py",
+    "src/repro/kernels/backend.py",
+    "src/repro/checkpoint/tm_store.py",
+]
+
+
+def _documented_methods(cls: ast.ClassDef) -> dict[str, bool]:
+    """{method name: has docstring} for one class body."""
+    out = {}
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = ast.get_docstring(node) is not None
+    return out
+
+
+def check(paths: list[str]) -> list[str]:
+    """Missing-docstring records (``path:line name``) across ``paths``."""
+    trees: dict[str, ast.Module] = {}
+    # class name -> {method: has_doc}, across every checked module, so an
+    # override can inherit its doc from a base defined in another module
+    class_methods: dict[str, dict[str, bool]] = {}
+    class_bases: dict[str, list[str]] = {}
+    for rel in paths:
+        tree = ast.parse((REPO / rel).read_text(), filename=rel)
+        trees[rel] = tree
+        for node in tree.body:
+            if isinstance(node, ast.ClassDef):
+                class_methods[node.name] = _documented_methods(node)
+                class_bases[node.name] = [
+                    b.id for b in node.bases if isinstance(b, ast.Name)]
+
+    def inherited_doc(cls_name: str, method: str,
+                      seen: frozenset = frozenset()) -> bool:
+        for base in class_bases.get(cls_name, []):
+            if base in seen:
+                continue
+            if class_methods.get(base, {}).get(method):
+                return True
+            if inherited_doc(base, method, seen | {cls_name}):
+                return True
+        return False
+
+    missing = []
+    for rel, tree in trees.items():
+        if ast.get_docstring(tree) is None:
+            missing.append(f"{rel}:1 <module>")
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if node.name.startswith("_"):
+                    continue
+                if ast.get_docstring(node) is None:
+                    missing.append(f"{rel}:{node.lineno} {node.name}()")
+            elif isinstance(node, ast.ClassDef):
+                if node.name.startswith("_"):
+                    continue
+                if ast.get_docstring(node) is None:
+                    missing.append(f"{rel}:{node.lineno} class {node.name}")
+                for meth in node.body:
+                    if not isinstance(meth, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef)):
+                        continue
+                    if meth.name.startswith("_"):
+                        continue
+                    if ast.get_docstring(meth) is not None:
+                        continue
+                    if inherited_doc(node.name, meth.name):
+                        continue
+                    missing.append(
+                        f"{rel}:{meth.lineno} {node.name}.{meth.name}()")
+    return missing
+
+
+def main() -> int:
+    """Check ``MODULES`` (or argv paths); print misses; 0 iff none."""
+    paths = sys.argv[1:] or MODULES
+    missing = check(paths)
+    if missing:
+        print(f"{len(missing)} public definitions without docstrings:")
+        for m in missing:
+            print("  " + m)
+        return 1
+    print(f"docstring gate OK: {len(paths)} modules, every public "
+          "class/function documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,13 +15,26 @@ if git ls-files | grep -q '\.pyc$'; then
   exit 1
 fi
 
+echo "== docstring gate (public TM surface, README satellite) =="
+python scripts/check_docstrings.py
+
 echo "== tier-1 tests =="
 # The seed's mixtral prefill/decode deselect is gone: inference MoE routing
 # is dropless now (models/moe.py), so prefill and step-wise decode agree.
-# The `slow` subprocess tests (sharding, TM sharded/session/backends parity)
-# put this gate at ~40 min on the 1-core container; use
+# The `slow` subprocess tests (sharding, TM sharded/session/backends/ragged
+# parity) put this gate at ~40 min on the 1-core container; use
 # `pytest -m "not slow"` for a fast local loop (pytest.ini).
 python -m pytest -x -q
+
+echo "== README quickstart (executed from the doc, never drifts) =="
+python - <<'EOF'
+import pathlib, re
+text = pathlib.Path("README.md").read_text()
+m = re.search(r"<!-- ci-quickstart -->\s*```python\n(.*?)```", text, re.S)
+assert m, "no <!-- ci-quickstart --> python block in README.md"
+exec(compile(m.group(1), "README.md#quickstart", "exec"),
+     {"__name__": "__main__"})
+EOF
 
 echo "== quickstart (TsetlinMachine estimator API) =="
 python examples/quickstart.py
@@ -43,6 +56,9 @@ assert d["engines"], "no engine records in BENCH_tm_serve.json"
 assert d["devices"] == 4, f"device count not recorded: {d.get('devices')}"
 assert d["topology"]["sharded"], d["topology"]
 assert d["topology"]["backend"] == "pallas_interpret", d["topology"]
+# §9: the fired composition rule is part of the topology metadata
+assert d["topology"]["composition"] in (
+    "composed_even", "composed_ragged", "clause_only"), d["topology"]
 assert "bitpack" in d["engines"], list(d["engines"])
 sweep = {row["devices"]: row for row in d["batch_axis_scaling"]}
 assert set(sweep) == {1, 2, 4}, sweep
@@ -61,16 +77,21 @@ echo "== dryrun --tm (kernel backend routes + the single vote all-reduce) =="
 python -m repro.launch.dryrun --tm
 python - <<'EOF'
 import json
-d = json.load(open("results/dryrun/tm/2x4.json"))
-assert not d["failures"], d["failures"]
-routes = d["backend_routes"]
-# the Pallas route must actually run the kernel shard-locally, with the
-# (B, m) vote all-reduce still the only collective (DESIGN.md §8)
-pi = routes["pallas_interpret"]
-assert pi["pallas_call_in_jaxpr"] and pi["one_vote_all_reduce"], pi
-assert not routes["xla"]["pallas_call_in_jaxpr"], routes["xla"]
-print("dryrun --tm backend routes OK:",
-      {k: v["pallas_call_in_jaxpr"] for k, v in routes.items()})
+# even cell (PR 3/4 contract) + the previously-indivisible ragged cell (§9)
+for mesh, rule in (("2x4", "composed_even"), ("2x3", "composed_ragged")):
+    d = json.load(open(f"results/dryrun/tm/{mesh}.json"))
+    assert not d["failures"], d["failures"]
+    routes = d["backend_routes"]
+    # the Pallas route must actually run the kernel shard-locally, with the
+    # (B, m) vote all-reduce still the only collective (DESIGN.md §8)
+    pi = routes["pallas_interpret"]
+    assert pi["pallas_call_in_jaxpr"] and pi["one_vote_all_reduce"], pi
+    assert not routes["xla"]["pallas_call_in_jaxpr"], routes["xla"]
+    # the route record names which composition rule fired (§9)
+    seq = d["train_step_sequential"]
+    assert seq["composition"] == rule and seq["all_reduce_only"], seq
+    print(f"dryrun --tm {mesh} OK: composition={seq['composition']},",
+          {k: v["pallas_call_in_jaxpr"] for k, v in routes.items()})
 EOF
 
 echo "== BENCH_tm.json backend sweep (engine x backend x topology) =="
@@ -82,16 +103,23 @@ import json
 d = json.load(open("BENCH_tm.json"))
 sweep = d["backend_sweep"]
 assert sweep, "empty backend_sweep in BENCH_tm.json"
-cells = {(r["engine"], r["backend"], r["clause_shards"]) for r in sweep}
+cells = {(r["engine"], r["backend"], r["clause_shards"], r["data_shards"])
+         for r in sweep}
 for engine in ("bitpack", "indexed"):
     for backend in ("xla", "pallas_interpret"):
         for shards in (1, 4):
-            assert (engine, backend, shards) in cells, (
+            assert (engine, backend, shards, 1) in cells, (
                 engine, backend, shards, sorted(cells))
+        # §9: the ragged 2×2 data×clause cell rides along per backend
+        assert (engine, backend, 2, 2) in cells, (
+            engine, backend, sorted(cells))
+ragged = [r for r in sweep if r["composition"] == "composed_ragged"]
+assert ragged, [r["composition"] for r in sweep]
 for r in sweep:
     assert r["infer_us"] > 0 and r["train_us"] > 0, r
     assert r["devices"] == 4, r
-print(f"BENCH_tm.json backend sweep well-formed: {len(sweep)} cells")
+print(f"BENCH_tm.json backend sweep well-formed: {len(sweep)} cells "
+      f"({len(ragged)} composed_ragged)")
 EOF
 
 echo "CI smoke: OK"

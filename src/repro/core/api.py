@@ -53,10 +53,12 @@ class TMBundle:
     event_overflow: jax.Array | None = None
 
     def tree_flatten(self):
+        """Pytree protocol: leaves = (state, caches, overflow), aux = cfg."""
         return (self.state, self.caches, self.event_overflow), self.cfg
 
     @classmethod
     def tree_unflatten(cls, cfg, children):
+        """Pytree protocol: rebuild from ``tree_flatten``'s output."""
         state, caches, event_overflow = children
         return cls(cfg=cfg, state=state, caches=caches,
                    event_overflow=event_overflow)
@@ -138,6 +140,7 @@ def bundle_scores(
 def bundle_predict(
     bundle: TMBundle, x: jax.Array, *, engine: str = DEFAULT_ENGINE
 ) -> jax.Array:
+    """(B, o) → (B,) argmax class via a registered engine (pure, jittable)."""
     return jnp.argmax(bundle_scores(bundle, x, engine=engine), axis=-1)
 
 

@@ -156,6 +156,7 @@ def register_engine(engine: EvalEngine) -> EvalEngine:
 
 
 def get_engine(name: str) -> EvalEngine:
+    """Look up a registered engine by name (KeyError lists what exists)."""
     try:
         return _REGISTRY[name]
     except KeyError:

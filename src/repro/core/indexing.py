@@ -45,17 +45,19 @@ class ClauseIndex(NamedTuple):
 
 
 def shard_capacity(capacity: int, n_shards: int) -> int:
-    """Per-shard list capacity for a clause-sharded index.
+    """Per-shard list capacity for a clause-sharded index: ⌈capacity/S⌉.
 
-    Capacity rows split with the clauses they hold (worst case per shard is
-    its clause count, and the default capacity *is* ``n_clauses``), so the
-    global ``(m, 2o, capacity)`` lists tensor tiles exactly over shards.
+    Capacity rows split with the clauses they hold: the per-shard worst case
+    is the shard's clause count, which is ⌈n_clauses/S⌉ under the ragged
+    clause geometry (DESIGN.md §9) — and the default capacity *is*
+    ``n_clauses``, so the ceiling keeps every shard's worst case covered for
+    any shard count, divisible or not. The assembled global
+    ``(m, 2o, S·⌈capacity/S⌉)`` lists tensor is opaque storage outside
+    shard_map; shard-local lists hold *local* clause ids, which stay dense
+    (``[0, n_local)``) under clause-axis padding because padding rows never
+    include a literal and therefore never enter a list.
     """
-    if capacity % n_shards:
-        raise ValueError(
-            f"index capacity {capacity} must divide by {n_shards} clause "
-            "shards (set TMConfig.index_capacity to a multiple)")
-    return capacity // n_shards
+    return -(-capacity // n_shards)
 
 
 def empty_index(cfg: TMConfig, capacity: int) -> ClauseIndex:

@@ -87,13 +87,16 @@ class Topology:
 
     @property
     def n_devices(self) -> int:
+        """Devices this topology occupies (``clause_shards · data_shards``)."""
         return self.clause_shards * self.data_shards
 
     @property
     def is_sharded(self) -> bool:
+        """True when the topology needs a mesh (more than one device)."""
         return self.n_devices > 1
 
     def describe(self) -> dict:
+        """Machine-readable placement summary (benchmarks record this)."""
         return {"clause_shards": self.clause_shards,
                 "data_shards": self.data_shards,
                 "devices": self.n_devices}
@@ -154,6 +157,7 @@ class TMSession:
 
         if not topology.is_sharded:
             self.mesh = None
+            self.geometry = None
             self._prepare = None
             self._step = None
             return
@@ -170,6 +174,10 @@ class TMSession:
                     f"data_shards={topology.data_shards}) needs "
                     f"{topology.n_devices} devices: {e}") from None
         self.mesh = mesh
+        # ragged clause geometry + the sequential composition rule this
+        # (cfg × mesh) resolves to (DESIGN.md §9) — any shard counts compose;
+        # make_sharded_train_step warns when the rule is 'replicated'
+        self.geometry = distributed.geometry(cfg, mesh)
         self._prepare = distributed.make_sharded_prepare(
             cfg, mesh, engines=self.engines)
         self._step = distributed.make_sharded_train_step(
@@ -180,20 +188,53 @@ class TMSession:
 
     @property
     def is_sharded(self) -> bool:
+        """True when this session resolved onto a mesh (shard_map path)."""
         return self.mesh is not None
 
     def state_sharding(self):
-        """Target sharding of ``ta_state`` under this session (None = any)."""
+        """Target sharding of the bundle's ``ta_state`` (None = any).
+
+        Under a ragged clause geometry the sharded array is the *padded*
+        state (``geometry.n_padded`` clause rows), so this sharding does
+        not apply to an unpadded global state — ``prepare`` pads first.
+        """
         if self.mesh is None:
             return None
         from repro.core.distributed import STATE_PSPEC
         return NamedSharding(self.mesh, STATE_PSPEC.ta_state)
 
+    def unpad_state(self, state: TMState) -> TMState:
+        """Global ``(m, n_clauses, 2o)`` view of a (possibly padded) state.
+
+        Sharded bundles carry the ragged clause layout (DESIGN.md §9);
+        everything user-facing — the estimator's ``state`` property,
+        checkpoints, cross-topology comparisons — goes through this view,
+        so padding never leaks out of the session.
+        """
+        if self.geometry is None or not self.geometry.ragged_clauses:
+            return state
+        from repro.core import distributed
+        return distributed.unpad_state(self.cfg, state)
+
     def describe(self) -> dict:
+        """Placement summary + the resolved backend and composition rule.
+
+        ``composition`` names the sequential-learning rule the topology
+        resolved to (``composed_even`` / ``composed_ragged`` /
+        ``replicated`` / ``clause_only``; ``single`` on one device,
+        ``batch_parallel`` when the session runs the parallel learning
+        mode) — recorded in BENCH_tm_serve.json topology metadata.
+        """
         from repro.kernels.backend import resolve_backend
         d = self.topology.describe()
         d["sharded"] = self.is_sharded
         d["backend"] = resolve_backend(self.cfg.backend)
+        if self.geometry is None:
+            d["composition"] = "single"
+        elif self.parallel:
+            d["composition"] = "batch_parallel"
+        else:
+            d["composition"] = self.geometry.composition
         return d
 
     # -- bundle lifecycle ---------------------------------------------------
@@ -206,6 +247,8 @@ class TMSession:
         return init_bundle(self.cfg, engines=self.engines, state=state)
 
     def init_bundle(self, rng: jax.Array | None = None) -> TMBundle:
+        """Freshly initialised bundle (all TAs exclude), placed and cached
+        per this session's topology."""
         return self.prepare(init_tm(self.cfg, rng))
 
     # -- execution ----------------------------------------------------------
@@ -230,6 +273,9 @@ class TMSession:
 
     def scores(self, bundle: TMBundle, x, *,
                engine: str = DEFAULT_ENGINE) -> jax.Array:
+        """(B, o) inputs → (B, m) class scores through a registry engine
+        (the single-device jitted graph, or the sharded one-all-reduce
+        scores path when this session holds a mesh)."""
         if self.mesh is None:
             return api._scores_jit(bundle, x, engine=engine)
         fn = self._scores_fns.get(engine)
@@ -241,6 +287,7 @@ class TMSession:
 
     def predict(self, bundle: TMBundle, x, *,
                 engine: str = DEFAULT_ENGINE) -> jax.Array:
+        """(B, o) inputs → (B,) argmax class through a registry engine."""
         if self.mesh is None:
             return api._predict_jit(bundle, x, engine=engine)
         return jnp.argmax(self.scores(bundle, x, engine=engine), axis=-1)
@@ -249,20 +296,32 @@ class TMSession:
 
     def save(self, directory, bundle: TMBundle, *, step: int = 0,
              keep: int = 3, blocking: bool = True) -> None:
+        """Write a schema-v1 checkpoint of the bundle's global TA state.
+
+        Always the unpadded ``(m, n_clauses, 2o)`` view — checkpoints are
+        topology-free, so a state saved under a ragged placement loads
+        bit-exactly anywhere (and vice versa)."""
         from repro.checkpoint import tm_store
-        tm_store.save_tm(directory, self.cfg, bundle.state.ta_state,
+        ta = self.unpad_state(bundle.state).ta_state
+        tm_store.save_tm(directory, self.cfg, ta,
                          step=step, keep=keep, blocking=blocking)
 
     def restore(self, directory, *, step: int | None = None):
         """(bundle, step) from a schema-v1 checkpoint: the TA state lands on
         this session's placement and every cache rebuilds on this topology
-        (reshard-on-restore — caches are never persisted)."""
+        (reshard-on-restore — caches are never persisted). Under a ragged
+        clause geometry the checkpointed global state cannot land directly
+        on the mesh (the sharded layout is the padded one), so it loads
+        unplaced and ``prepare`` pads + places it."""
         from repro.checkpoint import tm_store
         like = jax.ShapeDtypeStruct(
             (self.cfg.n_classes, self.cfg.n_clauses, self.cfg.n_literals),
             self.cfg.state_dtype)
+        sharding = (None if (self.geometry is not None
+                             and self.geometry.ragged_clauses)
+                    else self.state_sharding())
         ta, step = tm_store.load_tm(directory, self.cfg, like, step=step,
-                                    sharding=self.state_sharding())
+                                    sharding=sharding)
         return self.prepare(TMState(ta_state=ta)), step
 
 
@@ -301,11 +360,13 @@ class TsetlinMachine:
 
     @property
     def topology(self) -> Topology:
+        """The placement this machine's session resolved."""
         return self.session.topology
 
     # -- lifecycle ----------------------------------------------------------
 
     def init(self, rng: jax.Array | None = None) -> "TsetlinMachine":
+        """(Re)initialise the bundle on this machine's topology."""
         self.bundle = self.session.init_bundle(rng)
         return self
 
@@ -369,12 +430,15 @@ class TsetlinMachine:
     # -- inference ----------------------------------------------------------
 
     def scores(self, xs, *, engine: str = DEFAULT_ENGINE) -> jax.Array:
+        """(B, o) inputs → (B, m) class scores through a registry engine."""
         return self.session.scores(self._ensure_bundle(), xs, engine=engine)
 
     def predict(self, xs, *, engine: str = DEFAULT_ENGINE) -> jax.Array:
+        """(B, o) inputs → (B,) argmax class through a registry engine."""
         return self.session.predict(self._ensure_bundle(), xs, engine=engine)
 
     def evaluate(self, xs, ys, *, engine: str = DEFAULT_ENGINE) -> float:
+        """Mean prediction accuracy of ``xs`` against labels ``ys``."""
         return float(jnp.mean(
             (self.predict(xs, engine=engine) == ys).astype(jnp.float32)))
 
@@ -403,7 +467,10 @@ class TsetlinMachine:
 
     @property
     def state(self) -> TMState:
-        return self._ensure_bundle().state
+        """The global ``(m, n_clauses, 2o)`` TA state (never padded: any
+        ragged clause-axis padding the sharded layout carries is stripped,
+        so states compare bit-exactly across topologies)."""
+        return self.session.unpad_state(self._ensure_bundle().state)
 
     @property
     def index(self) -> indexing.ClauseIndex:

@@ -108,11 +108,18 @@ def _slice_rands(rands: FeedbackRands, start: jax.Array,
     Every shard materialises the identical full-size draw and takes its own
     row block — the only scheme that keeps sharded learning bit-exact with
     the single-device path (per-shard draws would consume different keys).
+
+    The row indices clamp into the draw instead of dynamic-slicing it, so a
+    *padded* slice (ragged data×clause sub-slices, DESIGN.md §9) whose tail
+    rows fall past ``n_clauses`` still reads the exact draw rows for its
+    real clauses; the clamped duplicates land only on padding rows, whose
+    updates are masked out (``clause_mask``).
     """
+    idx = jnp.clip(start + jnp.arange(n_local),
+                   0, rands.clause_gate.shape[0] - 1)
     return FeedbackRands(
-        clause_gate=jax.lax.dynamic_slice_in_dim(
-            rands.clause_gate, start, n_local, 0),
-        type_i=jax.lax.dynamic_slice_in_dim(rands.type_i, start, n_local, 0),
+        clause_gate=jnp.take(rands.clause_gate, idx, axis=0),
+        type_i=jnp.take(rands.type_i, idx, axis=0),
     )
 
 
@@ -155,6 +162,7 @@ def _class_round(
     # axis) when the sequential path additionally splits clauses over the
     # data axes (hierarchical data×clause sharding)
     axis_name: str | tuple[str, ...] | None = None,
+    clause_mask: jax.Array | None = None,  # (n,) bool — False rows frozen
 ) -> jax.Array:
     """One feedback round for one class; returns updated (n, 2o) states.
 
@@ -163,6 +171,13 @@ def _class_round(
     per-class vote is the *only* cross-shard quantity (one psum — the vote
     all-reduce of the Massively Parallel TM architecture); Type I/II feedback
     is clause-local given that vote.
+
+    ``clause_mask`` marks the rows that are *real* clauses: ragged shard
+    slices (DESIGN.md §9) pad their clause axis, and a padding row must stay
+    bit-identical through the round — it is excluded from the update gate
+    (``active``), so both feedback bodies apply a zero delta. Its vote
+    contribution is already zero by the sign-0 polarity padding convention,
+    so the mask never touches the vote sum.
 
     Both halves of the round resolve through the kernel backend registry
     (``cfg.backend``): clause evaluation (``clause_outputs``) and feedback
@@ -184,6 +199,8 @@ def _class_round(
     votes = jnp.clip(vote_sum, -t, t)
     p = jnp.where(positive_round, (t - votes) / (2 * t), (t + votes) / (2 * t))
     active = rands.clause_gate < p                    # (n,)
+    if clause_mask is not None:
+        active = active & clause_mask                 # padding rows frozen
 
     pos_pol = pol > 0
     # target round: positive clauses→Type I, negative→Type II; swapped otherwise
@@ -207,6 +224,7 @@ def update_sample(
     pol: jax.Array | None = None,
     axis_name: str | tuple[str, ...] | None = None,
     clause_start: jax.Array | None = None,
+    clause_mask: jax.Array | None = None,
 ) -> TMState:
     """One online update (the paper's per-sample learning).
 
@@ -217,7 +235,8 @@ def update_sample(
     slice ``pol``, the mesh clause ``axis_name`` (vote psum) and the shard's
     global ``clause_start`` (rand slicing) — every shard draws the identical
     full-size randomness and consumes its own rows, so the sharded update is
-    bit-exact with the single-device one.
+    bit-exact with the single-device one. ``clause_mask`` (n,) freezes
+    padding rows of a ragged slice (see ``_class_round``).
     """
     lit = literals_from_input(x)
     k_neg, k_a, k_b = jax.random.split(rng, 3)
@@ -233,10 +252,12 @@ def update_sample(
         rands_a = _slice_rands(rands_a, clause_start, n_local)
         rands_b = _slice_rands(rands_b, clause_start, n_local)
     row_pos = _class_round(cfg, ta[y], lit, rands_a, jnp.asarray(True),
-                           pol=pol, axis_name=axis_name)
+                           pol=pol, axis_name=axis_name,
+                           clause_mask=clause_mask)
     ta = ta.at[y].set(row_pos)
     row_neg = _class_round(cfg, ta[neg], lit, rands_b, jnp.asarray(False),
-                           pol=pol, axis_name=axis_name)
+                           pol=pol, axis_name=axis_name,
+                           clause_mask=clause_mask)
     ta = ta.at[neg].set(row_neg)
     return TMState(ta_state=ta)
 
@@ -248,6 +269,7 @@ def update_batch_sequential(
     axis_name: str | tuple[str, ...] | None = None,
     clause_start: jax.Array | None = None,
     mask: jax.Array | None = None,
+    clause_mask: jax.Array | None = None,
 ) -> TMState:
     """Faithful online learning over a batch: lax.scan of per-sample updates.
 
@@ -258,13 +280,16 @@ def update_batch_sequential(
     ``mask`` (B,) bool marks valid samples: masked-out rows consume their
     randomness (so padded and unpadded streams stay key-aligned) but apply no
     state update — the padding contract for fixed-shape trailing batches.
+    ``clause_mask`` (n,) bool marks valid *clause rows*: the transpose
+    contract for ragged shard slices (padding rows frozen, DESIGN.md §9).
     """
     keys = jax.random.split(rng, xs.shape[0])
 
     def body(st, inp):
         x, y, k, m = inp
         new = update_sample(cfg, st, x, y, k, pol=pol, axis_name=axis_name,
-                            clause_start=clause_start)
+                            clause_start=clause_start,
+                            clause_mask=clause_mask)
         return TMState(ta_state=jnp.where(m, new.ta_state, st.ta_state)), None
 
     valid = jnp.ones(xs.shape[0], bool) if mask is None else mask
@@ -282,6 +307,7 @@ def update_batch_parallel(
     batch_start: jax.Array | None = None,
     batch_total: int | None = None,
     mask: jax.Array | None = None,
+    clause_mask: jax.Array | None = None,
 ) -> TMState:
     """Beyond-paper: batch-parallel update (deltas computed vs the *same*
     pre-batch state, then summed). An approximation of online learning —
@@ -292,7 +318,9 @@ def update_batch_parallel(
     ``batch_start``; per-sample keys are the global split sliced to match
     (bit-exact with the single-device split), and the summed deltas are
     psum'd over ``batch_axes`` before the clip. ``mask`` (B,) bool zeroes
-    the deltas of padded samples (randomness still consumed per row).
+    the deltas of padded samples (randomness still consumed per row);
+    ``clause_mask`` (n,) bool zeroes the deltas of padded clause rows
+    (ragged shard slices, DESIGN.md §9).
     """
     if batch_total is None:
         keys = jax.random.split(rng, xs.shape[0])
@@ -304,7 +332,8 @@ def update_batch_parallel(
 
     def one(x, y, k):
         new = update_sample(cfg, state, x, y, k, pol=pol, axis_name=axis_name,
-                            clause_start=clause_start)
+                            clause_start=clause_start,
+                            clause_mask=clause_mask)
         return (new.ta_state.astype(jnp.int32) - state.ta_state.astype(jnp.int32))
 
     deltas = jax.vmap(one)(xs, ys, keys)

@@ -70,11 +70,31 @@ class ClausePartitioning:
     psum over ``CLAUSE_AXIS`` yields the global result (the single (B, m)
     vote all-reduce); False when the primitive is clause-elementwise and
     needs no collective at all.
+    ``clause_padding`` — how the primitive stays correct when its clause
+    rows carry *padding* (the ragged geometry of DESIGN.md §9 pads the
+    clause axis to ``clause_shards·⌈n/clause_shards⌉`` rows, and sequential
+    data×clause composition pads each shard's sub-slices again):
+
+      * ``'zero_polarity'`` — a padding row's ±1 polarity operand is 0, so
+        its contribution to the partial vote sum is identically zero
+        whatever the row evaluates to. No masking needed inside the body.
+      * ``'masked_active'``  — a padding row's ``active`` gate operand is
+        False, so both feedback branches apply a zero delta and the row
+        passes through bit-identically (the "zero update mask").
+      * ``'caller_sliced'``  — the primitive computes padding rows like any
+        other; the caller owns discarding them (reassembly slice / vote
+        weighting downstream).
+
+    The sharded wiring (``core/distributed.py``) realises exactly these
+    conventions — zero-padded polarity, the ``clause_mask``-gated update,
+    the reassembly slice — and tests/test_kernel_backends.py pins the
+    declarations equal to it.
     """
 
     in_specs: tuple
     out_spec: object
     vote_reduce: bool = False
+    clause_padding: str = "caller_sliced"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +119,7 @@ def register_primitive(prim: Primitive) -> Primitive:
 
 
 def get_primitive(name: str) -> Primitive:
+    """Look up a registered primitive by name (KeyError lists what exists)."""
     try:
         return _PRIMITIVES[name]
     except KeyError:
@@ -108,6 +129,7 @@ def get_primitive(name: str) -> Primitive:
 
 
 def registered_primitives() -> tuple[str, ...]:
+    """Registered primitive names, registration order."""
     return tuple(_PRIMITIVES)
 
 
@@ -227,6 +249,7 @@ register_primitive(Primitive(
                   P(CLAUSE_AXIS)),              # polarity (n,)
         out_spec=P(None, None),                 # (B, m) partial votes
         vote_reduce=True,
+        clause_padding="zero_polarity",         # sign-0 rows are inert
     ),
 ))
 
@@ -240,6 +263,7 @@ register_primitive(Primitive(
                   P(None, None)),
         out_spec=P(None, None, CLAUSE_AXIS),    # (B, m, n)
         vote_reduce=False,
+        clause_padding="caller_sliced",         # outputs feed a 0-pol vote
     ),
 ))
 
@@ -257,5 +281,6 @@ register_primitive(Primitive(
                   P(CLAUSE_AXIS, None)),        # uniforms (n, 2o)
         out_spec=P(CLAUSE_AXIS, None),
         vote_reduce=False,
+        clause_padding="masked_active",         # False gate ⇒ zero delta
     ),
 ))

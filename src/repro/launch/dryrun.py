@@ -92,8 +92,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     return record
 
 
-def run_tm_checks(*, data: int = 2, model: int = 4, batch: int = 16,
-                  train_batch: int = 8, save: bool = True) -> dict:
+def run_tm_checks(*, data: int = 2, model: int = 4, n_clauses: int = 256,
+                  batch: int = 16, train_batch: int = 8, save: bool = True,
+                  expect_composition: str | None = None) -> dict:
     """Lower + compile the clause-sharded TM path; assert the vote HLO.
 
     For every registered engine: the sharded ``scores`` program must contain
@@ -108,22 +109,36 @@ def run_tm_checks(*, data: int = 2, model: int = 4, batch: int = 16,
     evaluator must *be* the Pallas kernel (``pallas_call`` in the jaxpr)
     while the program still contains only the single vote all-reduce; under
     ``xla`` no kernel call may appear.
+
+    Ragged routes (DESIGN.md §9): ``n_clauses`` need not divide by either
+    mesh axis. The sequential train record names which composition rule
+    fired (``composed_even`` / ``composed_ragged`` / ``replicated``);
+    ``expect_composition`` records a failure when a different rule fires —
+    the CI cell pins a previously-indivisible shape onto
+    ``composed_ragged`` with the collective profile unchanged
+    (all-reduce-only, one vote all-reduce for scores).
     """
     import jax.numpy as jnp
 
     from repro.core import TMConfig, registered_engines
     from repro.core.distributed import (
-        make_sharded_prepare, make_sharded_scores, make_sharded_train_step)
+        geometry, make_sharded_prepare, make_sharded_scores,
+        make_sharded_train_step)
     from repro.core.engines import get_engine
     from repro.core.types import init_tm
     from repro.launch.mesh import make_host_mesh
 
-    cfg = TMConfig(n_classes=10, n_clauses=256, n_features=196)
+    cfg = TMConfig(n_classes=10, n_clauses=n_clauses, n_features=196)
     mesh = make_host_mesh(data=data, model=model)
+    geom = geometry(cfg, mesh)
     bundle = make_sharded_prepare(cfg, mesh)(init_tm(cfg))
     xs = jnp.zeros((batch, cfg.n_features), jnp.uint8)
-    record: dict = {"mesh": f"{data}x{model}", "engines": {},
-                    "backend_routes": {}, "failures": []}
+    record: dict = {"mesh": f"{data}x{model}", "n_clauses": n_clauses,
+                    "geometry": {"n_local": geom.n_local,
+                                 "n_padded": geom.n_padded,
+                                 "n_sub": geom.n_sub,
+                                 "ragged_clauses": geom.ragged_clauses},
+                    "engines": {}, "backend_routes": {}, "failures": []}
 
     for name in registered_engines():
         eng = get_engine(name)
@@ -180,21 +195,26 @@ def run_tm_checks(*, data: int = 2, model: int = 4, batch: int = 16,
         compiled = step.jitted.lower(bundle.state, bundle.caches, step.pol,
                                      txs, tys, kd, tmask, overflow0).compile()
         coll = hlo_mod.collective_stats(compiled.as_text())
-        # sequential composes data×clause here (data axis > 1, divisible):
+        # sequential composes data×clause here (even or ragged sub-slices):
         # its clause-slice reassembly psum is an all-reduce too — the
         # contract stays "all-reduce only", never a gather of state/caches
         ok = set(coll.by_kind) <= {"all-reduce"}
         key = f"train_step_{'parallel' if parallel else 'sequential'}"
         record[key] = {"collective_count": coll.count,
                        "by_kind": coll.by_kind, "all_reduce_only": ok,
-                       "composes_data_axis": bool(
-                           getattr(step, "composes_data_axis", False))}
+                       "composition": step.composition}
         print(f"[tm] {key}: collectives={coll.by_kind} count={coll.count} "
-              f"{'OK' if ok else 'FAIL'}", flush=True)
+              f"composition={step.composition} {'OK' if ok else 'FAIL'}",
+              flush=True)
         if not ok:
             record["failures"].append(
                 f"{key}: feedback must stay shard-local — found "
                 f"{coll.by_kind}")
+        if (not parallel and expect_composition is not None
+                and step.composition != expect_composition):
+            record["failures"].append(
+                f"{key}: expected composition rule {expect_composition!r}, "
+                f"fired {step.composition!r}")
 
     if save:
         out = RESULTS / "tm"
@@ -217,14 +237,27 @@ def main():
     args = ap.parse_args()
 
     if args.tm:
-        record = run_tm_checks()
-        if record["failures"]:
-            print(f"\n{len(record['failures'])} TM FAILURES:")
-            for f in record["failures"]:
+        # the PR-3 even cell + a previously-indivisible ragged cell
+        # (n_clauses=128 over 3 clause shards × 2 data ranks — DESIGN.md §9):
+        # both must lower to the same collective profile, and the ragged one
+        # must fire the composed_ragged rule, not the replication fallback
+        records = [
+            run_tm_checks(expect_composition="composed_even"),
+            run_tm_checks(data=2, model=3, n_clauses=128,
+                          expect_composition="composed_ragged"),
+        ]
+        failures = [f for r in records for f in r["failures"]]
+        if failures:
+            print(f"\n{len(failures)} TM FAILURES:")
+            for f in failures:
                 print("  ", f)
             raise SystemExit(1)
         print("\nTM sharded lowering: all engines OK "
-              "(one vote all-reduce; shard-local feedback)")
+              "(one vote all-reduce; shard-local feedback; "
+              "composition rules: "
+              + ", ".join(f"{r['mesh']}→"
+                          f"{r['train_step_sequential']['composition']}"
+                          for r in records) + ")")
         return
 
     cells = []

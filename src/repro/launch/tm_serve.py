@@ -310,7 +310,8 @@ def main() -> None:
     print(f"topology: {topo['data_shards']}×data · {topo['clause_shards']}"
           f"×clause on {record['devices']} devices "
           f"({'sharded' if topo['sharded'] else 'single-device'} scores "
-          f"path, backend={topo['backend']})")
+          f"path, backend={topo['backend']}, "
+          f"composition={topo['composition']})")
     for name, r in record["engines"].items():
         lm = r["latency_ms"]
         tag = "  [SATURATED: offered load > capacity; percentiles are " \

@@ -104,8 +104,10 @@ def make_tm_task(
         return {"bundle": nb, "step": state["step"] + 1}, metrics
 
     def to_ckpt(state: dict) -> dict:
-        return tm_store.checkpoint_tree(cfg, state["bundle"].state.ta_state,
-                                        step=int(state["step"]))
+        # always the unpadded global state: checkpoints are topology-free,
+        # so a ragged clause layout (DESIGN.md §9) never leaks into one
+        ta = session.unpad_state(state["bundle"].state).ta_state
+        return tm_store.checkpoint_tree(cfg, ta, step=int(state["step"]))
 
     def from_ckpt(loaded: dict, state: dict) -> dict:
         tm_store.validate_meta(loaded, cfg, where="trainer checkpoint")

@@ -4,15 +4,22 @@ The acceptance property of the session API (subprocess,
 ``--xla_force_host_platform_device_count=8``):
 
   * the *same estimator script* under ``Topology(1 device)``,
-    ``Topology(clause_shards=4)`` and
-    ``Topology(data_shards=2, clause_shards=2)`` produces identical
-    predictions and bit-identical TA states for the same seed, in both
-    learning modes — including a trailing partial batch padded under a
-    sample mask (sequential mode exercises the hierarchical data×clause
-    composition; parallel mode the batch sharding);
+    ``Topology(clause_shards=4)``,
+    ``Topology(data_shards=2, clause_shards=2)`` and the **ragged**
+    ``Topology(data_shards=3, clause_shards=2)`` (per-shard clause count 8
+    does not divide by 3 — composed via zero-padded sub-slices, DESIGN.md
+    §9) produces identical predictions and bit-identical TA states for the
+    same seed, in both learning modes — including a trailing partial batch
+    padded under a sample mask (sequential mode exercises the hierarchical
+    data×clause composition; parallel mode the batch sharding);
   * a versioned checkpoint written under one topology (4 clause shards)
-    restores bit-exactly under others (1 device, then 2×2) — caches rebuilt
-    on the restoring topology, state resharded on load;
+    restores bit-exactly under others (1 device, 2×2, then the ragged
+    3×2) and a checkpoint written under the ragged topology restores
+    bit-exactly on one device — caches rebuilt on the restoring topology,
+    state resharded (and padding stripped) on load;
+  * event-overflow accounting is placement-independent: with a zero-sized
+    buffer the overflow counter equals the exact global crossing count on
+    the single-device and the ragged topology alike;
   * restoring with a semantically different config (same shapes) fails with
     the config-fingerprint error, not a shape complaint.
 """
@@ -40,15 +47,20 @@ SCRIPT = textwrap.dedent("""
                    s=3.0, threshold=4)
     ALL = cfg.n_classes * cfg.n_clauses * cfg.n_literals
     rng = np.random.default_rng(0)
-    # 20 samples at batch_size=8 -> the third batch pads 4 rows under a mask
+    # 20 samples at batch_size=6 -> the fourth batch pads 4 rows under a
+    # mask; 6 divides over every topology's data axis (1, 2 and 3 — batches
+    # and eval shapes must divide the mesh data axis in parallel/scores)
     xs = jnp.asarray(rng.integers(0, 2, (20, 12)), jnp.uint8)
     ys = jnp.asarray(rng.integers(0, 3, 20), jnp.int32)
-    xe = jnp.asarray(rng.integers(0, 2, (8, 12)), jnp.uint8)
+    xe = jnp.asarray(rng.integers(0, 2, (6, 12)), jnp.uint8)
 
     TOPOLOGIES = {
         "single": Topology(),
         "clause4": Topology(clause_shards=4),
         "data2xclause2": Topology(data_shards=2, clause_shards=2),
+        # ragged: n_local=8 does not divide by data_shards=3 — previously
+        # the silent replication fallback, now composed_ragged (§9)
+        "ragged3xclause2": Topology(data_shards=3, clause_shards=2),
     }
 
     # ---- estimator parity: same script, any placement, both modes ----
@@ -58,8 +70,11 @@ SCRIPT = textwrap.dedent("""
         for name, topo in TOPOLOGIES.items():
             m = TsetlinMachine(cfg, topology=topo, parallel=parallel,
                                max_events_per_batch=ALL, seed=7).init()
-            m.fit(xs, ys, epochs=2, batch_size=8)
+            m.fit(xs, ys, epochs=2, batch_size=6)
             machines[name] = m
+        if not parallel:
+            d = machines["ragged3xclause2"].session.describe()
+            assert d["composition"] == "composed_ragged", d
         ref = machines["single"]
         ref_ta = np.asarray(ref.state.ta_state)
         ref_pred = np.asarray(ref.predict(xe, engine="dense"))
@@ -80,7 +95,8 @@ SCRIPT = textwrap.dedent("""
     saver.save(tmp + "/ck", step=5)
     want = np.asarray(saver.predict(xe, engine="dense"))
     want_ta = np.asarray(saver.state.ta_state)
-    for name in ("single", "data2xclause2"):   # 4 shards -> 1 -> 2x2
+    # 4 shards -> 1 -> 2x2 -> the ragged 3x2 (divisible -> ragged)
+    for name in ("single", "data2xclause2", "ragged3xclause2"):
         loaded = TsetlinMachine.load(tmp + "/ck", cfg,
                                      topology=TOPOLOGIES[name],
                                      max_events_per_batch=ALL)
@@ -90,7 +106,34 @@ SCRIPT = textwrap.dedent("""
             np.testing.assert_array_equal(
                 np.asarray(loaded.predict(xe, engine=engine)), want,
                 err_msg=f"restore-{name}/{engine}")
+    # ragged -> divisible: padding never leaks into a checkpoint
+    trained[False]["ragged3xclause2"].save(tmp + "/ck_ragged", step=5)
+    back = TsetlinMachine.load(tmp + "/ck_ragged", cfg,
+                               max_events_per_batch=ALL)
+    np.testing.assert_array_equal(
+        np.asarray(back.state.ta_state),
+        np.asarray(trained[False]["ragged3xclause2"].state.ta_state))
     print("tm-session-checkpoint-ok")
+
+    # ---- overflow accounting: exact crossing counts, any placement ----
+    # max_events=0 drops every boundary crossing, so the counter must equal
+    # the global crossing count — identically on 1 device and ragged shards
+    # (per-shard counts psum over the clause axis; padding rows never cross)
+    ovf = {}
+    for name in ("single", "ragged3xclause2"):
+        m0 = TsetlinMachine(cfg, topology=TOPOLOGIES[name],
+                            max_events_per_batch=0, seed=7).init()
+        m0.partial_fit(xs[:8], ys[:8])
+        ovf[name] = m0.event_overflow
+    m1 = TsetlinMachine(cfg, topology=Topology(),
+                        max_events_per_batch=ALL, seed=7).init()
+    before = np.asarray(m1.state.ta_state > cfg.n_states)
+    m1.partial_fit(xs[:8], ys[:8])
+    crossings = int((before != np.asarray(
+        m1.state.ta_state > cfg.n_states)).sum())
+    assert ovf["single"] == ovf["ragged3xclause2"] == crossings, (
+        ovf, crossings)
+    print("tm-session-overflow-ok")
 
     # ---- fingerprint: same shapes, different semantics -> clear error ----
     other = dataclasses.replace(cfg, threshold=9)
@@ -111,5 +154,5 @@ def test_tm_session_topology_parity_subprocess():
         capture_output=True, text=True, timeout=900)
     assert res.returncode == 0, res.stdout + "\n" + res.stderr
     for marker in ("tm-session-parity-ok", "tm-session-checkpoint-ok",
-                   "tm-session-fingerprint-ok"):
+                   "tm-session-overflow-ok", "tm-session-fingerprint-ok"):
         assert marker in res.stdout, res.stdout + "\n" + res.stderr

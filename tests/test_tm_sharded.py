@@ -8,6 +8,11 @@ Registry-driven (subprocess, ``--xla_force_host_platform_device_count=8``):
     bit-exact TA state vs the single-device ``api.train_step``, and every
     engine's shard-local cache stays a faithful mirror (scores parity after
     training proves the event sync);
+  * ragged boundaries (DESIGN.md §9): a prime per-shard clause count whose
+    data sub-slices carry more padding than real rows on some ranks trains
+    and scores bit-exactly (``composed_ragged``), and the
+    ``data_shards > n_local`` escape hatch warns, names the ``replicated``
+    rule, and stays bit-exact;
   * the fault-tolerant trainer checkpoints a sharded TM bundle, crashes,
     and restores **onto a different mesh** (reshard-on-restore: 4 clause
     shards → 2), continuing bit-exactly vs an uninterrupted single-device
@@ -49,7 +54,8 @@ SCRIPT = textwrap.dedent("""
     stm = TMSession(cfg, mesh=mesh, max_events=ALL)
     assert stm.describe() == {"clause_shards": 4, "data_shards": 2,
                               "devices": 8, "sharded": True,
-                              "backend": "xla"}, stm.describe()
+                              "backend": "xla",
+                              "composition": "composed_even"}, stm.describe()
     sb = stm.prepare(state)
 
     # ---- scores parity: every registered engine, bit-exact vs dense ----
@@ -81,6 +87,68 @@ SCRIPT = textwrap.dedent("""
             np.testing.assert_array_equal(
                 got2, want2, err_msg=f"{name} parallel={parallel}")
     print("tm-train-parity-ok")
+
+    # ---- ragged boundaries (DESIGN.md §9) ----
+    import warnings
+
+    # prime per-shard clause count with padding > real rows on a rank:
+    # n_clauses=14 over model=2 -> n_local=7 (prime); data=3 -> n_sub=3,
+    # so the last data rank owns 1 real row + 2 padding rows per shard
+    cfg_p = TMConfig(n_classes=3, n_clauses=14, n_features=12, n_states=50,
+                     s=3.0, threshold=4)
+    ALLP = cfg_p.n_classes * cfg_p.n_clauses * cfg_p.n_literals
+    inc_p = rng.uniform(size=(3, 14, 24)) < 0.4
+    state_p = TMState(ta_state=jnp.asarray(
+        np.where(inc_p, cfg_p.n_states + 1, cfg_p.n_states), jnp.int16))
+    mesh_p = make_host_mesh(data=3, model=2)
+    stm_p = TMSession(cfg_p, mesh=mesh_p, max_events=ALLP)
+    assert stm_p.describe()["composition"] == "composed_ragged", (
+        stm_p.describe())
+    ref_p = init_bundle(cfg_p, state=state_p)
+    b_p = stm_p.prepare(state_p)
+    key = jax.random.key(2)
+    for _ in range(2):
+        key, sub = jax.random.split(key)
+        bx = jnp.asarray(rng.integers(0, 2, (6, 12)), jnp.uint8)
+        by = jnp.asarray(rng.integers(0, 3, 6), jnp.int32)
+        ref_p = train_step(ref_p, bx, by, sub, max_events=ALLP)
+        b_p = stm_p.train_step(b_p, bx, by, sub)
+    np.testing.assert_array_equal(
+        np.asarray(stm_p.unpad_state(b_p.state).ta_state),
+        np.asarray(ref_p.state.ta_state))
+    # eval batch must divide over the 3-way data axis (scores shard it)
+    xe_p = xs_eval[:6]
+    want_p = np.asarray(bundle_scores(ref_p, xe_p, engine="dense"))
+    for name in registered_engines():
+        np.testing.assert_array_equal(
+            np.asarray(stm_p.scores(b_p, xe_p, engine=name)), want_p,
+            err_msg=f"prime-ragged/{name}")
+    print("tm-ragged-prime-ok")
+
+    # escape hatch: data_shards=4 > n_local=3 (n_clauses=6 / model=2) ->
+    # warn-and-replicate, naming the fired rule; still bit-exact
+    cfg_r = TMConfig(n_classes=3, n_clauses=6, n_features=12, n_states=50,
+                     s=3.0, threshold=4)
+    ALLR = cfg_r.n_classes * cfg_r.n_clauses * cfg_r.n_literals
+    mesh_r = make_host_mesh(data=4, model=2)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        stm_r = TMSession(cfg_r, mesh=mesh_r, max_events=ALLR)
+    assert stm_r.describe()["composition"] == "replicated", stm_r.describe()
+    assert any("'replicated'" in str(w.message)
+               and "data_shards=4" in str(w.message) for w in caught), (
+        [str(w.message) for w in caught])
+    ref_r = init_bundle(cfg_r)
+    b_r = stm_r.prepare(ref_r.state)
+    key, sub = jax.random.split(key)
+    bx = jnp.asarray(rng.integers(0, 2, (6, 12)), jnp.uint8)
+    by = jnp.asarray(rng.integers(0, 3, 6), jnp.int32)
+    ref_r = train_step(ref_r, bx, by, sub, max_events=ALLR)
+    b_r = stm_r.train_step(b_r, bx, by, sub)
+    np.testing.assert_array_equal(
+        np.asarray(stm_r.unpad_state(b_r.state).ta_state),
+        np.asarray(ref_r.state.ta_state))
+    print("tm-ragged-replicate-ok")
 
     # ---- trainer: sharded checkpoint → crash → reshard-on-restore ----
     from repro.checkpoint.checkpointer import Checkpointer
@@ -139,5 +207,6 @@ def test_tm_sharded_parity_subprocess():
         capture_output=True, text=True, timeout=900)
     assert res.returncode == 0, res.stdout + "\n" + res.stderr
     for marker in ("tm-scores-parity-ok", "tm-train-parity-ok",
+                   "tm-ragged-prime-ok", "tm-ragged-replicate-ok",
                    "tm-trainer-reshard-ok"):
         assert marker in res.stdout, res.stdout + "\n" + res.stderr
