@@ -7,6 +7,8 @@ Sections:
                 engine registry + the §3 work-ratio validation (0.02 / 0.006);
                 also written to BENCH_tm.json for cross-PR tracking
   [work_ratio]  hardware-independent reproduction of the paper's Remarks
+  [serving]     closed-loop tail latency + open-loop sync-vs-async knee
+                (serving runtime, DESIGN.md §10) via repro.launch.tm_serve
   [lm_step]     reduced-config LM step wall-times (all 10 archs)
 
 ``--smoke`` runs a single scaled-down TM cell (no JSON, no LM zoo) — the CI
@@ -85,6 +87,19 @@ def main() -> None:
         lm_ = r["latency_ms"]
         print(f"tm/serve/{eng}/p95,{lm_['p95'] * 1e3:.2f},"
               f"p99_ms={lm_['p99']} thru_rps={r['throughput_rps']}")
+
+    # --- TM serving: open-loop sync-vs-async knee (DESIGN.md §10) ---------
+    sus = tm_serve.run_sustained(
+        TMConfig(n_classes=10, n_clauses=256, n_features=196),
+        engines=("indexed", "bitpack_xla") if args.full
+        else ("bitpack_xla",),
+        max_batch=32, step_duration_s=1.0 if args.full else 0.5)
+    for eng, r in sus["engines"].items():
+        knee, base = r["knee"], r["sync_baseline"]["achieved_rps"]
+        print(f"tm/serve_async/{eng}/knee_rps,,{knee['achieved_rps']:.1f} "
+              f"sync_rps={base:.1f} speedup={r['speedup_at_knee']} "
+              f"exceeds={r['knee_exceeds_sync']} "
+              f"hot_loop_compiles={r['aot']['hot_loop_compiles']}")
 
     # --- LM zoo step wall-times -------------------------------------------
     if not args.skip_lm:

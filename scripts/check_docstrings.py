@@ -32,6 +32,11 @@ MODULES = [
     "src/repro/core/engines.py",
     "src/repro/kernels/backend.py",
     "src/repro/checkpoint/tm_store.py",
+    "src/repro/serving/__init__.py",
+    "src/repro/serving/aot.py",
+    "src/repro/serving/fairness.py",
+    "src/repro/serving/loadgen.py",
+    "src/repro/serving/runtime.py",
 ]
 
 

@@ -42,7 +42,7 @@ python examples/quickstart.py
 echo "== benchmark smoke cell =="
 python -m benchmarks.run --smoke
 
-echo "== tm_serve smoke (sharded Pallas-interpret serving, 4-device mesh) =="
+echo "== tm_serve smoke (async serving runtime, sharded Pallas-interpret, 4-device mesh) =="
 rm -f BENCH_tm_serve.json
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   python -m repro.launch.tm_serve --smoke --backend pallas_interpret
@@ -50,6 +50,7 @@ python - <<'EOF'
 import json
 d = json.load(open("BENCH_tm_serve.json"))
 assert d["engines"], "no engine records in BENCH_tm_serve.json"
+assert d["schema"] == 2, f"expected schema 2, got {d.get('schema')}"
 # the smoke must exercise the sharded scores path on the 4-device mesh and
 # record the device count + per-device-count batch-axis scaling, serving the
 # packed engine through the Pallas-interpret kernel route
@@ -68,9 +69,29 @@ for name, r in d["engines"].items():
     lat = r["latency_ms"]
     assert {"p50", "p90", "p95", "p99"} <= set(lat), (name, lat)
     assert r["throughput_rps"] > 0, (name, r)
+    # compile keys are strings by contract (docs/BENCH_SCHEMAS.md)
+    assert all(isinstance(k, str) for k in r["compile_s_per_bucket"]), r
+# §10: the open-loop sync-vs-async sustained_load section is well-formed —
+# offered/achieved/rejections per step, a knee identified, and the AOT
+# hot-loop invariant held (zero compilations, zero misses in the timed loop)
+sl = d["sustained_load"]
+assert set(sl["engines"]) == set(d["engines"]), sl.keys()
+for name, r in sl["engines"].items():
+    assert r["open_loop"] and r["steps"], (name, r)
+    for s in r["steps"]:
+        assert {"offered_rps", "achieved_rps", "rejection_rate",
+                "latency_ms"} <= set(s), (name, s)
+    assert r["knee"]["index"] in range(len(r["steps"])), (name, r["knee"])
+    assert r["knee"]["criterion"], (name, r["knee"])
+    assert r["sync_baseline"]["achieved_rps"] > 0, (name, r)
+    assert r["aot"]["hot_loop_compiles"] == 0, (name, r["aot"])
+    assert r["aot"]["misses"] == 0, (name, r["aot"])
+    assert isinstance(r["knee_exceeds_sync"], bool), (name, r)
 print("BENCH_tm_serve.json well-formed:", ", ".join(d["engines"]),
       "| scaling devices:", sorted(sweep),
-      "| backend:", d["topology"]["backend"])
+      "| backend:", d["topology"]["backend"],
+      "| sustained knees:", {n: r["knee"]["achieved_rps"]
+                             for n, r in sl["engines"].items()})
 EOF
 
 echo "== dryrun --tm (kernel backend routes + the single vote all-reduce) =="

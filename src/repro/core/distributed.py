@@ -271,9 +271,11 @@ def make_sharded_scores(cfg: TMConfig, mesh, *, engine: str = DEFAULT_ENGINE):
         local_fn, mesh=mesh, in_specs=(cache_spec, P(CLAUSE_AXIS), bspec),
         out_specs=bspec))
 
-    def scores(bundle: TMBundle, x: jax.Array) -> jax.Array:
+    def operand(bundle: TMBundle):
+        """The engine operand ``fn`` evaluates: the TA state for cache-less
+        engines, the prepared shard-local cache otherwise."""
         if not eng.needs_cache:
-            return fn(bundle.state, pol, x)
+            return bundle.state
         cache = bundle.caches.get(eng.cache_key)
         if cache is None:
             raise KeyError(
@@ -281,10 +283,34 @@ def make_sharded_scores(cfg: TMConfig, mesh, *, engine: str = DEFAULT_ENGINE):
                 f"prepared in this bundle (slots: {tuple(bundle.caches)}); "
                 "include it in the engines= of make_sharded_prepare / the "
                 "TMSession — sharded caches cannot be built on the fly")
-        return fn(cache, pol, x)
+        return cache
 
-    # exposed for the dry-run's HLO assertions (launch/dryrun.py --tm)
+    def scores(bundle: TMBundle, x: jax.Array) -> jax.Array:
+        return fn(operand(bundle), pol, x)
+
+    def aot_jit(donate_x: bool = False):
+        """The same shard_map body under an AOT-friendly ``jax.jit``:
+        explicit per-operand in/out ``NamedSharding``s (so
+        ``.lower(...).compile()`` bakes the placement into the executable
+        instead of re-inferring it per call) and, when ``donate_x``, the
+        batch operand donated — the serving AOT cache's lowering target
+        (``TMSession.lower_scores`` / ``serving/aot.py``)."""
+        as_named = lambda spec: jax.tree.map(  # noqa: E731
+            lambda s: NamedSharding(mesh, s), spec,
+            is_leaf=lambda s: isinstance(s, P))
+        return jax.jit(
+            shard_map_compat(local_fn, mesh=mesh,
+                             in_specs=(cache_spec, P(CLAUSE_AXIS), bspec),
+                             out_specs=bspec),
+            in_shardings=(as_named(cache_spec), as_named(P(CLAUSE_AXIS)),
+                          as_named(bspec)),
+            out_shardings=as_named(bspec),
+            donate_argnums=(2,) if donate_x else ())
+
+    # exposed for the dry-run's HLO assertions (launch/dryrun.py --tm) and
+    # the AOT serving cache's lowering hook (core/session.py lower_scores)
     scores.jitted, scores.pol, scores.engine = fn, pol, eng
+    scores.operand, scores.aot_jit, scores.bspec = operand, aot_jit, bspec
     return scores
 
 

@@ -44,6 +44,43 @@ from repro.core.types import TMConfig, TMState, init_tm
 
 
 @dataclasses.dataclass(frozen=True)
+class ScoresLowering:
+    """One padded batch shape's scores graph, staged for AOT compilation.
+
+    Produced by ``TMSession.lower_scores`` and consumed by the serving AOT
+    bucket cache (``serving/aot.py``): ``lowered.compile()`` yields the
+    executable once at startup, and the hot serving loop only ever calls
+    ``bind(compiled, x)`` — which closes over the (fixed) serving bundle's
+    operands, so a dispatch can never retrace or recompile.
+
+    ``x_sharding`` is the placement a ``(batch_size, n_features)`` uint8
+    batch must land on before ``bind`` (None on a single-device session:
+    any uncommitted array is accepted).
+    """
+
+    lowered: object            # jax.stages.Lowered
+    bind: object               # (compiled, x) -> (batch_size, m) scores
+    x_sharding: object | None  # NamedSharding of the batch operand (or None)
+    batch_size: int
+    engine: str
+
+
+# AOT serving jits for the single-device path, keyed by the donate-x flag —
+# module-level for the same reason as api._scores_jit: every session and
+# estimator shares one XLA compilation cache.
+_AOT_SCORES_JIT: dict[bool, object] = {}
+
+
+def _aot_scores_jit(donate_x: bool):
+    fn = _AOT_SCORES_JIT.get(donate_x)
+    if fn is None:
+        fn = jax.jit(api.bundle_scores, static_argnames=("engine",),
+                     donate_argnums=(1,) if donate_x else ())
+        _AOT_SCORES_JIT[donate_x] = fn
+    return fn
+
+
+@dataclasses.dataclass(frozen=True)
 class Topology:
     """Declarative placement for a TM: resolved once by ``TMSession``.
 
@@ -271,6 +308,15 @@ class TMSession:
                               max_events=self.max_events,
                               donate=self.topology.donate)
 
+    def _sharded_scores_fn(self, engine: str):
+        """Memoised ``make_sharded_scores`` wrapper for one engine."""
+        fn = self._scores_fns.get(engine)
+        if fn is None:
+            from repro.core.distributed import make_sharded_scores
+            fn = make_sharded_scores(self.cfg, self.mesh, engine=engine)
+            self._scores_fns[engine] = fn
+        return fn
+
     def scores(self, bundle: TMBundle, x, *,
                engine: str = DEFAULT_ENGINE) -> jax.Array:
         """(B, o) inputs → (B, m) class scores through a registry engine
@@ -278,12 +324,70 @@ class TMSession:
         scores path when this session holds a mesh)."""
         if self.mesh is None:
             return api._scores_jit(bundle, x, engine=engine)
-        fn = self._scores_fns.get(engine)
-        if fn is None:
-            from repro.core.distributed import make_sharded_scores
-            fn = make_sharded_scores(self.cfg, self.mesh, engine=engine)
-            self._scores_fns[engine] = fn
-        return fn(bundle, x)
+        return self._sharded_scores_fn(engine)(bundle, x)
+
+    def fingerprint(self) -> str:
+        """Short stable id of (config × resolved placement × backend).
+
+        Part of the AOT serving cache key (``serving/aot.py``): two
+        sessions share compiled bucket executables only when their configs
+        fingerprint-match *and* they resolved to the same placement,
+        composition rule, and kernel backend. Built from the checkpoint
+        config fingerprint (which deliberately ignores ``backend``) plus
+        ``describe()`` (which records the resolved backend), so a backend
+        switch changes the serving key without invalidating checkpoints.
+        """
+        import hashlib
+
+        from repro.checkpoint.tm_store import config_fingerprint
+        blob = repr(sorted(self.describe().items())).encode()
+        blob += bytes(bytearray(config_fingerprint(self.cfg)))
+        return hashlib.sha256(blob).hexdigest()[:16]
+
+    def lower_scores(self, bundle: TMBundle, batch_size: int, *,
+                     engine: str = DEFAULT_ENGINE,
+                     donate_x: bool = False) -> ScoresLowering:
+        """Stage the scores graph for one padded batch shape (AOT hook).
+
+        The returned ``ScoresLowering`` separates the three serving phases
+        the hot loop must never mix: ``lowered`` (trace + lower, done
+        here), ``lowered.compile()`` (done once per bucket by
+        ``serving/aot.py``, timed separately), and ``bind(compiled, x)``
+        (the only thing a dispatch calls). ``bind`` closes over *this*
+        bundle's operands — the sharded resolution binds the prepared
+        shard-local cache (or the TA state for cache-less engines) with
+        explicit in/out shardings, the single-device resolution binds the
+        bundle through the shared AOT jit. ``donate_x`` donates the batch
+        operand's buffer to the executable (pass
+        ``api.resolve_donate(None)`` to donate wherever the backend
+        implements it).
+        """
+        x_spec = jax.ShapeDtypeStruct((batch_size, self.cfg.n_features),
+                                      jnp.uint8)
+        if self.mesh is None:
+            fn = _aot_scores_jit(donate_x)
+            lowered = fn.lower(bundle, x_spec, engine=engine)
+
+            def bind(compiled, x):
+                return compiled(bundle, x)
+
+            return ScoresLowering(lowered=lowered, bind=bind,
+                                  x_sharding=None, batch_size=batch_size,
+                                  engine=engine)
+
+        sfn = self._sharded_scores_fn(engine)
+        operand = sfn.operand(bundle)
+        x_sharding = NamedSharding(self.mesh, sfn.bspec)
+        x_spec = jax.ShapeDtypeStruct(x_spec.shape, x_spec.dtype,
+                                      sharding=x_sharding)
+        lowered = sfn.aot_jit(donate_x).lower(operand, sfn.pol, x_spec)
+
+        def bind(compiled, x):
+            return compiled(operand, sfn.pol, x)
+
+        return ScoresLowering(lowered=lowered, bind=bind,
+                              x_sharding=x_sharding, batch_size=batch_size,
+                              engine=engine)
 
     def predict(self, bundle: TMBundle, x, *,
                 engine: str = DEFAULT_ENGINE) -> jax.Array:

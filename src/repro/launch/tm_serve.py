@@ -1,5 +1,4 @@
-"""Batched TM serving through a ``TMSession``: pad/bucket incoming requests,
-run a registry engine on any topology, report tail latency + throughput.
+"""TM serving benchmark CLI — a thin layer over ``repro.serving``.
 
     PYTHONPATH=src python -m repro.launch.tm_serve --smoke
     PYTHONPATH=src python -m repro.launch.tm_serve \
@@ -7,33 +6,33 @@ run a registry engine on any topology, report tail latency + throughput.
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.launch.tm_serve --data-shards 4
 
-The serving loop is the TM analogue of ``launch/serve.py``'s LM loop, built
-on the session API (core/session.py): one ``TMBundle`` carries the
-maintained cache of whichever engine serves, and inference is a single
-jitted ``session.scores`` call per batch — the single-device graph on a
-1-device topology, the clause-sharded ``make_sharded_scores`` shard_map
-path (one (B, m) vote all-reduce; batch sharded over the ``data`` axis
-communication-free) on a multi-device mesh. The serve loop itself never
-branches on placement.
+The serving runtime itself lives in ``src/repro/serving/`` (DESIGN.md
+§10): an AOT bucket cache compiles every padding bucket up front
+(``serving/aot.py``), ``AsyncTMServer`` overlaps host batching with
+device compute behind bounded-backlog admission control and per-tenant
+fairness (``serving/runtime.py``), and an open-loop Poisson load
+generator sweeps offered rates (``serving/loadgen.py``). This module only
+builds sessions, drives the benchmark, and writes the record.
 
-Batching policy (DESIGN.md §6): requests queue with their arrival time;
-when the server frees up it takes everything queued (capped at
-``max_batch``); when idle it admits the next arrival and holds a
-``max_wait_ms`` window to accumulate a batch. Batches pad to power-of-two
-buckets so every shape compiles exactly once (compile time is measured
-separately up front, never inside the latency loop); on a data-sharded
-topology the smallest bucket is the data-shard count so every batch
-divides over the mesh. The loop runs on a simulated arrival clock advanced
-by *measured* compute times, so the percentiles are real compute under a
-synthetic load — deterministic per seed, no sleeps.
+``BENCH_tm_serve.json`` (schema 2, docs/BENCH_SCHEMAS.md; gitignored
+scratch like ``BENCH_tm.json``) contains:
 
-Emits ``BENCH_tm_serve.json`` (gitignored scratch, like ``BENCH_tm.json``)
-with per-engine latency percentiles, throughput, padding efficiency, the
-serving topology, and — when more than one device is available — a
-``batch_axis_scaling`` sweep: the same load served at 1, 2, … data shards,
-so batch-axis scaling is visible per device count. The CI smoke
-(scripts/ci.sh) runs under a forced 4-device host platform and asserts the
-device count and the sweep are recorded.
+  * ``engines`` — the legacy closed-loop records from ``serve_engine``:
+    a simulated arrival clock advanced by *measured* compute times
+    (deterministic per seed, no sleeps). Kept for latency-percentile
+    tracking across PRs; its "throughput" splices compute windows
+    end-to-end and is **not** wall-clock comparable (DESIGN.md §10).
+  * ``sustained_load`` — the open-loop comparison: a ``SyncTMServer``
+    (the old blocking loop behind the modern submit surface) is ramped to
+    saturation, then ``AsyncTMServer`` sweeps an offered-rate ladder
+    around that baseline. Same load generator, same wall clock, so
+    ``knee_exceeds_sync`` is a fair apples-to-apples claim.
+  * ``batch_axis_scaling`` — the same load at 1, 2, … data shards when
+    more than one device is available.
+
+The CI smoke (scripts/ci.sh) runs under a forced 4-device host platform
+with ``--backend pallas_interpret`` and asserts the record's shape,
+including a well-formed ``sustained_load`` with zero hot-loop compiles.
 """
 from __future__ import annotations
 
@@ -49,6 +48,10 @@ import numpy as np
 from repro.core import TMConfig, TMState, registered_engines
 from repro.core.session import TMSession, Topology
 from repro.data.synthetic import binarized_images
+from repro.serving import (
+    AOTBucketCache, AsyncTMServer, SyncTMServer, bucket_for, buckets,
+    run_step, sustained_load)
+from repro.serving.loadgen import holds
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,35 +60,10 @@ class ServePolicy:
     max_wait_ms: float = 2.0  # batching window when the queue is empty
 
 
-def buckets(max_batch: int, min_batch: int = 1) -> list[int]:
-    """Power-of-two padding buckets in [min_batch, max_batch].
-
-    ``min_batch`` is the serving topology's data-shard count: every padded
-    batch must divide over the mesh ``data`` axis, so a top bucket that is
-    not a multiple of ``min_batch`` rounds *down* to one (the serve loop
-    caps admission at the top bucket).
-    """
-    if min_batch > max_batch:
-        raise ValueError(
-            f"max_batch={max_batch} < data shards={min_batch}: every "
-            "batch must divide over the data axis — raise max_batch or "
-            "serve with fewer data shards")
-    out = [min_batch]
-    while out[-1] < max_batch:
-        nxt = min(out[-1] * 2, max_batch)
-        if nxt % min_batch:
-            nxt = max(min_batch, (nxt // min_batch) * min_batch)
-            if nxt == out[-1]:
-                break
-        out.append(nxt)
-    return out
-
-
-def _bucket_for(n: int, sizes: list[int]) -> int:
-    for b in sizes:
-        if b >= n:
-            return b
-    return sizes[-1]
+# ``buckets`` / ``_bucket_for`` moved to serving/aot.py with the AOT cache;
+# re-exported here because the legacy loop and its tests import them from
+# this module.
+_bucket_for = bucket_for
 
 
 def _random_state(cfg: TMConfig, rng: np.random.Generator,
@@ -101,7 +79,17 @@ def _random_state(cfg: TMConfig, rng: np.random.Generator,
 def serve_engine(session: TMSession, bundle, x_all: np.ndarray,
                  arrivals: np.ndarray, *, engine: str,
                  policy: ServePolicy) -> dict:
-    """Run the batched loop for one engine; returns its stats record."""
+    """Run the legacy closed-loop batched loop for one engine.
+
+    The simulated clock advances by measured compute only, so the
+    percentiles are clean per-batch compute under a synthetic load — but
+    the throughput splices compute windows end-to-end and excludes every
+    host-side gap; compare wall-clock claims through ``run_sustained``
+    instead (DESIGN.md §10). ``compile_s_per_bucket`` keys are *strings*
+    deliberately: the record is JSON, where int keys would be silently
+    coerced — emitting them as strings keeps the in-memory record
+    identical to a load of the written file (docs/BENCH_SCHEMAS.md).
+    """
     sizes = buckets(policy.max_batch,
                     min_batch=session.topology.data_shards)
     o = x_all.shape[1]
@@ -112,7 +100,7 @@ def serve_engine(session: TMSession, bundle, x_all: np.ndarray,
         jax.block_until_ready(
             session.scores(bundle, jnp.zeros((b, o), jnp.uint8),
                            engine=engine))
-        compile_s[b] = round(time.perf_counter() - t0, 4)
+        compile_s[str(b)] = round(time.perf_counter() - t0, 4)
 
     n = x_all.shape[0]
     wait = policy.max_wait_ms / 1e3
@@ -196,6 +184,90 @@ def run(cfg: TMConfig, *, engines=("indexed",), topology: Topology | None = None
     return record
 
 
+def _saturation_rps(server, xs: np.ndarray, *, step_duration_s: float,
+                    rng: np.random.Generator,
+                    start_rps: float = 250.0) -> tuple[float, list[dict]]:
+    """Ramp offered load ×4 until the server stops holding it.
+
+    An overloaded open-loop step keeps the server continuously busy, so the
+    achieved
+    rate of the first non-holding step *is* the server's capacity; the max
+    achieved across the ramp is returned to absorb step noise.
+    """
+    steps, rate = [], start_rps
+    while rate <= 4e6:
+        step = run_step(server, xs, rps=rate, duration_s=step_duration_s,
+                        rng=rng)
+        steps.append(step)
+        if not holds(step):
+            break
+        rate *= 4
+    return max(s["achieved_rps"] for s in steps), steps
+
+
+# offered-rate ladder for the async sweep, as multiples of the measured
+# sync baseline — dense around 1.0 so the knee resolves whether the async
+# runtime clears the baseline, with overload steps past it
+ASYNC_LADDER = (0.4, 0.8, 1.05, 1.3, 1.8, 2.6)
+
+
+def run_sustained(cfg: TMConfig, *, engines=("indexed",),
+                  topology: Topology | None = None, max_batch: int = 32,
+                  step_duration_s: float = 1.0, seed: int = 0,
+                  include_density: float = 0.08) -> dict:
+    """The open-loop sync-vs-async comparison (``sustained_load`` section
+    of the schema-2 record).
+
+    Per engine: a ``SyncTMServer`` — the old blocking drain loop behind
+    the modern submit surface — is ramped to saturation, then an
+    ``AsyncTMServer`` over a shared AOT bucket cache sweeps an offered
+    ladder scaled to that baseline. Both modes run through the *same*
+    Poisson load generator on the same wall clock, so
+    ``knee_exceeds_sync`` is a fair claim (unlike the legacy
+    ``serve_engine`` throughput, whose simulated clock splices compute
+    windows — DESIGN.md §10).
+    """
+    rng = np.random.default_rng(seed)
+    session = TMSession(cfg, topology, engines=engines)
+    bundle = session.prepare(_random_state(cfg, rng, include_density))
+    xs, _ = binarized_images(512, cfg.n_features, cfg.n_classes,
+                             seed=seed + 1)
+    aot = AOTBucketCache(session, bundle, engines=tuple(engines),
+                         max_batch=max_batch)
+    out = {"step_duration_s": step_duration_s,
+           "ladder": list(ASYNC_LADDER), "engines": {}}
+    for engine in engines:
+        sync = SyncTMServer(session, bundle, engine=engine,
+                            max_batch=max_batch).start()
+        base, ramp = _saturation_rps(
+            sync, xs, step_duration_s=step_duration_s,
+            rng=np.random.default_rng(seed + 2))
+        sync.stop()
+
+        server = AsyncTMServer(session, bundle, engine=engine,
+                               max_batch=max_batch, aot=aot).start()
+        rec = sustained_load(server, xs,
+                             rps_steps=[m * base for m in ASYNC_LADDER],
+                             step_duration_s=step_duration_s,
+                             seed=seed + 3)
+        server.stop()
+
+        rec["sync_baseline"] = {
+            "achieved_rps": base,
+            "ramp": [{"offered_rps": s["offered_rps"],
+                      "achieved_rps": s["achieved_rps"],
+                      "rejection_rate": s["rejection_rate"]}
+                     for s in ramp]}
+        rec["knee_exceeds_sync"] = bool(rec["knee"]["achieved_rps"] > base)
+        rec["speedup_at_knee"] = (
+            round(rec["knee"]["achieved_rps"] / base, 3) if base else None)
+        out["engines"][engine] = rec
+    out["compile_s_per_bucket"] = aot.compile_report()
+    out["knee_exceeds_sync"] = all(
+        r["knee_exceeds_sync"] for r in out["engines"].values())
+    return out
+
+
 def run_batch_axis_scaling(cfg: TMConfig, *, engine: str = "indexed",
                            device_counts=None, n_requests: int = 256,
                            rps: float = 2000.0,
@@ -236,17 +308,46 @@ def run_batch_axis_scaling(cfg: TMConfig, *, engine: str = "indexed",
     return out
 
 
+# --smoke supplies these as *defaults* — any explicitly-passed flag wins
+# (bitpack in the smoke engine set resolves through the kernel backend
+# registry, so CI's --backend pallas_interpret exercises that route)
+SMOKE_DEFAULTS = {"engine": "indexed,bitpack", "classes": 4, "clauses": 64,
+                  "features": 48, "requests": 96, "max_batch": 8,
+                  "step_duration": 0.3}
+FULL_DEFAULTS = {"engine": "indexed", "classes": 10, "clauses": 256,
+                 "features": 196, "requests": 512, "max_batch": 32,
+                 "step_duration": 1.0}
+
+
+def resolve_flags(smoke: bool, **flags) -> dict:
+    """Merge CLI flags with the mode's defaults.
+
+    ``--smoke`` selects a *default set*, never an override: a flag the
+    user passed explicitly (non-None) always wins. The old CLI silently
+    discarded explicit ``--requests``/``--max-batch``/``--classes``/
+    ``--clauses``/``--features`` whenever ``--smoke`` was set.
+    """
+    base = SMOKE_DEFAULTS if smoke else FULL_DEFAULTS
+    unknown = set(flags) - set(base)
+    if unknown:
+        raise ValueError(f"unknown flags {sorted(unknown)}; "
+                         f"resolvable: {sorted(base)}")
+    return {k: (base[k] if v is None else v) for k, v in flags.items()}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description="batched TM serving benchmark")
-    ap.add_argument("--engine", default="indexed",
+    ap.add_argument("--engine", default=None,
                     help="comma-separated registry engine names")
-    ap.add_argument("--requests", type=int, default=512)
+    ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--rps", type=float, default=2000.0)
-    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=None)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
-    ap.add_argument("--classes", type=int, default=10)
-    ap.add_argument("--clauses", type=int, default=256)
-    ap.add_argument("--features", type=int, default=196)
+    ap.add_argument("--classes", type=int, default=None)
+    ap.add_argument("--clauses", type=int, default=None)
+    ap.add_argument("--features", type=int, default=None)
+    ap.add_argument("--step-duration", type=float, default=None,
+                    help="seconds per open-loop load step (sustained_load)")
     ap.add_argument("--data-shards", type=int, default=None,
                     help="serve data-sharded over this many devices "
                          "(default: all available)")
@@ -257,24 +358,25 @@ def main() -> None:
                          "(kernels/backend.py; default: TMConfig's 'auto')")
     ap.add_argument("--no-scaling", action="store_true",
                     help="skip the per-device-count batch-axis sweep")
+    ap.add_argument("--no-sustained", action="store_true",
+                    help="skip the open-loop sync-vs-async sustained_load "
+                         "sweep")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_tm_serve.json")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny load for CI (scripts/ci.sh)")
+                    help="tiny defaults for CI (scripts/ci.sh); explicit "
+                         "flags still win")
     args = ap.parse_args()
 
     n_dev = jax.local_device_count()
-    if args.smoke:
-        cfg = TMConfig(n_classes=4, n_clauses=64, n_features=48)
-        # bitpack resolves through the kernel backend registry, so the smoke
-        # exercises whatever --backend selects (CI: pallas_interpret)
-        engines = ("indexed", "bitpack")
-        n_requests, max_batch = 96, 8
-    else:
-        cfg = TMConfig(n_classes=args.classes, n_clauses=args.clauses,
-                       n_features=args.features)
-        engines = tuple(args.engine.split(","))
-        n_requests, max_batch = args.requests, args.max_batch
+    r = resolve_flags(args.smoke, engine=args.engine, classes=args.classes,
+                      clauses=args.clauses, features=args.features,
+                      requests=args.requests, max_batch=args.max_batch,
+                      step_duration=args.step_duration)
+    cfg = TMConfig(n_classes=r["classes"], n_clauses=r["clauses"],
+                   n_features=r["features"])
+    engines = tuple(r["engine"].split(","))
+    n_requests, max_batch = r["requests"], r["max_batch"]
     for e in engines:
         if e not in registered_engines():
             raise SystemExit(f"unknown engine {e!r}; "
@@ -292,6 +394,11 @@ def main() -> None:
     record = run(cfg, engines=engines, topology=topology,
                  n_requests=n_requests, rps=args.rps, policy=policy,
                  seed=args.seed)
+    record["schema"] = 2
+    if not args.no_sustained:
+        record["sustained_load"] = run_sustained(
+            cfg, engines=engines, topology=topology, max_batch=max_batch,
+            step_duration_s=r["step_duration"], seed=args.seed)
     if not args.no_scaling and n_dev > 1:
         sweep_requests = (min(n_requests, 256) if not args.smoke
                           else n_requests)
@@ -319,6 +426,14 @@ def main() -> None:
         print(f"{name}: p50={lm['p50']}ms p95={lm['p95']}ms "
               f"p99={lm['p99']}ms thru={r['throughput_rps']}req/s "
               f"pad_eff={r['padding_efficiency']}{tag}")
+    for name, s in record.get("sustained_load", {}).get("engines",
+                                                        {}).items():
+        knee = s["knee"]
+        print(f"sustained[{name}]: sync={s['sync_baseline']['achieved_rps']}"
+              f"req/s · async knee={knee['achieved_rps']}req/s at offered "
+              f"{knee['offered_rps']} ({s['speedup_at_knee']}x sync, "
+              f"exceeds={s['knee_exceeds_sync']}, hot-loop compiles="
+              f"{s['aot']['hot_loop_compiles']})")
     for row in record.get("batch_axis_scaling", []):
         print(f"scaling[{row['engine']}] devices={row['devices']}: "
               f"thru={row['throughput_rps']}req/s p95={row['p95_ms']}ms")

@@ -1,0 +1,39 @@
+"""Continuous-batching async TM serving runtime (DESIGN.md §10).
+
+The serving analogue of what ``Topology``/``TMSession`` did for training:
+the compute side was already placement-transparent, this package adds the
+host side a production server needs on top of it —
+
+  * ``aot``      — AOT bucket cache: every padding bucket's scores graph
+                   ``jit(...).lower(...).compile()``-d at startup, keyed on
+                   ``(engine, bucket, session fingerprint)``, so the hot
+                   loop can never compile;
+  * ``runtime``  — ``AsyncTMServer``: a dispatch thread forms batches from
+                   a bounded backlog (typed ``Overloaded`` rejection past
+                   the row/byte budget) while a result thread blocks on
+                   device futures and completes per-request promises —
+                   host batching of batch N+1 overlaps device compute of
+                   batch N;
+  * ``fairness`` — per-tenant weighted round-robin admission with
+                   per-tenant latency accounting;
+  * ``loadgen``  — open-loop (Poisson arrival) load generation and the
+                   ``sustained_load`` record: offered-vs-achieved curve,
+                   rejection rate, knee point.
+
+``launch/tm_serve.py`` is the CLI over this package and keeps the old
+synchronous drain loop only as the measured baseline.
+"""
+from repro.serving.aot import (
+    AOTBucketCache, AOTCacheMiss, bucket_for, buckets)
+from repro.serving.fairness import TenantQueues, TenantStats
+from repro.serving.loadgen import (
+    find_knee, holds, poisson_arrivals, run_step, sustained_load)
+from repro.serving.runtime import (
+    AsyncTMServer, Backlog, Overloaded, Promise, ScoreResult, SyncTMServer)
+
+__all__ = [
+    "AOTBucketCache", "AOTCacheMiss", "AsyncTMServer", "Backlog",
+    "Overloaded", "Promise", "ScoreResult", "SyncTMServer", "TenantQueues",
+    "TenantStats", "bucket_for", "buckets", "find_knee", "holds",
+    "poisson_arrivals", "run_step", "sustained_load",
+]

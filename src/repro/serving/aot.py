@@ -1,0 +1,175 @@
+"""AOT bucket cache: compile every padding bucket before the first request.
+
+The MaxText MLPerf offline-inference recipe applied to TM serving: the
+server declares its padding buckets up front, each bucket's scores graph is
+``jit(...).lower(...).compile()``-d at startup through
+``TMSession.lower_scores`` (explicit in/out shardings on a sharded session,
+optional batch-operand donation), and the hot serving loop only ever calls
+an already-compiled executable. Compile time is reported separately per
+bucket, never inside the latency loop; a lookup for a shape that was not
+pre-compiled raises ``AOTCacheMiss`` instead of silently tracing — zero
+compilations inside the timed loop is an *assertable* property
+(``counters()["lowerings"]`` is constant after construction).
+
+Entries are keyed on ``(engine, bucket, session fingerprint)``: the
+fingerprint covers config × resolved placement × kernel backend
+(``TMSession.fingerprint``), so executables are never reused across
+incompatible sessions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core.api import resolve_donate
+from repro.core.session import TMSession
+
+
+def buckets(max_batch: int, min_batch: int = 1) -> list[int]:
+    """Power-of-two padding buckets in [min_batch, max_batch].
+
+    ``min_batch`` is the serving topology's data-shard count: every padded
+    batch must divide over the mesh ``data`` axis, so a top bucket that is
+    not a multiple of ``min_batch`` rounds *down* to one (the serve loop
+    caps admission at the top bucket).
+    """
+    if min_batch > max_batch:
+        raise ValueError(
+            f"max_batch={max_batch} < data shards={min_batch}: every "
+            "batch must divide over the data axis — raise max_batch or "
+            "serve with fewer data shards")
+    out = [min_batch]
+    while out[-1] < max_batch:
+        nxt = min(out[-1] * 2, max_batch)
+        if nxt % min_batch:
+            nxt = max(min_batch, (nxt // min_batch) * min_batch)
+            if nxt == out[-1]:
+                break
+        out.append(nxt)
+    return out
+
+
+def bucket_for(n: int, sizes: list[int]) -> int:
+    """Smallest bucket in ``sizes`` (ascending) holding ``n`` rows."""
+    for b in sizes:
+        if b >= n:
+            return b
+    return sizes[-1]
+
+
+class AOTCacheMiss(KeyError):
+    """A scores executable was requested for a shape that was never
+    AOT-compiled — the serving invariant (no compilation in the hot loop)
+    would be violated, so the lookup fails loudly instead of tracing."""
+
+
+@dataclasses.dataclass(frozen=True)
+class _Entry:
+    compiled: object          # jax.stages.Compiled
+    bind: object              # (compiled, x) -> device scores
+    x_sharding: object | None
+    lower_s: float
+    compile_s: float
+
+
+class AOTBucketCache:
+    """Every (engine × padding bucket) scores executable, compiled up front.
+
+    >>> cache = AOTBucketCache(session, bundle, engines=("indexed",),
+    ...                        max_batch=32)
+    >>> scores = cache(x_padded, engine="indexed", bucket=32)  # never traces
+
+    ``__call__`` is the hot path: a dict lookup, an optional
+    ``device_put`` onto the batch operand's compiled sharding, and the
+    bound executable — it dispatches asynchronously (the caller blocks on
+    the returned device array when it needs the values, which is what lets
+    the dispatch thread race ahead of device compute).
+    """
+
+    def __init__(self, session: TMSession, bundle, *,
+                 engines=("indexed",), bucket_sizes=None,
+                 max_batch: int = 32, donate_x: bool | None = None,
+                 warmup: bool = True):
+        if bucket_sizes is None:
+            bucket_sizes = buckets(max_batch,
+                                   min_batch=session.topology.data_shards)
+        self.bucket_sizes = sorted({int(b) for b in bucket_sizes})
+        self.engines = tuple(engines)
+        self.fingerprint = session.fingerprint()
+        self.n_features = session.cfg.n_features
+        self.lowerings = 0   # constant after __init__ — the hot-loop assert
+        self.hits = 0
+        self.misses = 0
+        donate = resolve_donate(donate_x)
+        self._entries: dict[tuple[str, int, str], _Entry] = {}
+        for engine in self.engines:
+            for b in self.bucket_sizes:
+                t0 = time.perf_counter()
+                low = session.lower_scores(bundle, b, engine=engine,
+                                           donate_x=donate)
+                self.lowerings += 1
+                t1 = time.perf_counter()
+                compiled = low.lowered.compile()
+                t2 = time.perf_counter()
+                self._entries[(engine, b, self.fingerprint)] = _Entry(
+                    compiled=compiled, bind=low.bind,
+                    x_sharding=low.x_sharding,
+                    lower_s=t1 - t0, compile_s=t2 - t1)
+        if warmup:
+            self.warmup()
+
+    def __call__(self, x, *, engine: str, bucket: int) -> jax.Array:
+        """Dispatch one padded ``(bucket, n_features)`` batch through the
+        pre-compiled executable; raises ``AOTCacheMiss`` for unknown keys
+        (the cache is frozen at construction — by design nothing compiles
+        here)."""
+        entry = self._entries.get((engine, bucket, self.fingerprint))
+        if entry is None:
+            self.misses += 1
+            raise AOTCacheMiss(
+                f"no AOT executable for engine={engine!r} bucket={bucket} "
+                f"fingerprint={self.fingerprint} (compiled buckets: "
+                f"{self.bucket_sizes}, engines: {self.engines})")
+        self.hits += 1
+        if entry.x_sharding is not None:
+            x = jax.device_put(x, entry.x_sharding)
+        return entry.bind(entry.compiled, x)
+
+    def warmup(self) -> None:
+        """Run every executable once on zeros and block — first-dispatch
+        lazy costs (transfer setup, executable load) are paid here, not in
+        the timed loop. Warmup calls are excluded from the hit counter."""
+        hits = self.hits
+        for engine in self.engines:
+            for b in self.bucket_sizes:
+                x = np.zeros((b, self.n_features), np.uint8)
+                jax.block_until_ready(self(x, engine=engine, bucket=b))
+        self.hits = hits
+
+    def compile_report(self) -> dict:
+        """Per-engine ``{bucket: seconds}`` compile (and lowering) times.
+
+        Bucket keys are *strings* deliberately — this lands in JSON, where
+        int keys would be coerced anyway (docs/BENCH_SCHEMAS.md documents
+        the string-keyed shape).
+        """
+        out = {}
+        for (engine, b, _), e in sorted(self._entries.items(),
+                                        key=lambda kv: (kv[0][0], kv[0][1])):
+            out.setdefault(engine, {})[str(b)] = round(
+                e.lower_s + e.compile_s, 4)
+        return out
+
+    def counters(self) -> dict:
+        """Cache counters for benchmark records and the hot-loop assert:
+        ``lowerings`` must equal ``buckets`` (one per key) and stay
+        constant across serving; ``misses`` must stay 0."""
+        return {"engines": len(self.engines),
+                "buckets": len(self.bucket_sizes),
+                "entries": len(self._entries),
+                "lowerings": self.lowerings,
+                "hits": self.hits,
+                "misses": self.misses}

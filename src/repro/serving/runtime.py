@@ -1,0 +1,502 @@
+"""Continuous-batching async TM server: dispatch/result threads over an
+AOT bucket cache, bounded-backlog admission, per-tenant fairness.
+
+The synchronous loop this replaces (kept in ``launch/tm_serve.py`` as the
+measured baseline) serialises every phase: drain queue → pad → dispatch →
+*block on device* → repeat. Here the phases pipeline:
+
+  * ``submit`` (any thread) — admission control first: past the backlog's
+    row/byte budget the request resolves *immediately* with a typed
+    ``Overloaded`` result (callers shed load instead of queueing into a
+    latency cliff); admitted requests enter their tenant's FIFO.
+  * the **dispatch thread** — takes up to a top-bucket's worth of rows by
+    weighted round-robin (``fairness.TenantQueues``), pads to the bucket,
+    and dispatches through the AOT cache. Dispatch is asynchronous — the
+    thread does not wait for the device — so batch N+1 is padded and
+    queued on the device stream while batch N computes. An ``inflight``
+    slot semaphore applies backpressure: the dispatch thread (never
+    ``submit``) blocks for a free slot *before forming* a batch, and a
+    slot frees only when a batch fully completes.
+  * the **result thread** — blocks on each in-flight batch's device
+    arrays in dispatch order, completes the per-request promises with
+    ``ScoreResult``, records per-tenant latency, releases the backlog
+    budget, then frees the batch's in-flight slot.
+
+There is no batching timer: the in-flight device compute *is* the batching
+window. Because formation waits for a slot and slots free at completion,
+exactly one batch forms per completed compute window and carries that
+window's arrivals — small at low load, full at saturation (continuous
+batching). Gating *formation* rather than dispatch is what keeps batches
+from fragmenting at mid load: an ungated dispatch thread would race ahead,
+draining the queue into several tiny padded batches per window and burning
+capacity on padding. Every piece of the engine is also callable synchronously
+(``step()``) so admission, fairness, and completion are unit-testable with
+a deterministic clock and no threads (tests/test_tm_serving.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.aot import AOTBucketCache, bucket_for, buckets
+from repro.serving.fairness import TenantQueues, TenantStats
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoreResult:
+    """Successful completion: one request's class scores + timing."""
+
+    scores: np.ndarray  # (n_classes,)
+    tenant: str
+    arrival_s: float
+    done_s: float
+
+    @property
+    def latency_s(self) -> float:
+        """Arrival→completion latency (queueing + padding + compute)."""
+        return self.done_s - self.arrival_s
+
+
+@dataclasses.dataclass(frozen=True)
+class Overloaded:
+    """Typed admission rejection: the backlog budget was exhausted.
+
+    Resolved onto the promise *synchronously inside* ``submit`` — an
+    overloaded server sheds load in O(1) without touching the queues, so
+    rejection cost does not scale with the backlog it protects.
+    """
+
+    tenant: str
+    arrival_s: float
+    backlog_rows: int
+    backlog_bytes: int
+    max_rows: int
+    max_bytes: int
+
+
+class Promise:
+    """Single-assignment completion slot for one submitted request."""
+
+    __slots__ = ("_event", "result")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self.result = None
+
+    def resolve(self, result) -> None:
+        """Deliver the ``ScoreResult`` / ``Overloaded`` (exactly once)."""
+        self.result = result
+        self._event.set()
+
+    @property
+    def done(self) -> bool:
+        """True once ``resolve`` ran."""
+        return self._event.is_set()
+
+    def wait(self, timeout: float | None = None):
+        """Block until resolved; returns the result or raises
+        ``TimeoutError``."""
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not completed within timeout")
+        return self.result
+
+
+class Backlog:
+    """Bounded row/byte admission budget over queued + in-flight rows.
+
+    ``try_admit`` and ``release`` bracket a request's whole residency —
+    admission to completion — so the budget bounds end-to-end server
+    memory, not just the queue. Deterministic and lock-guarded (multiple
+    submitters, one releaser).
+    """
+
+    def __init__(self, max_rows: int, max_bytes: int):
+        if max_rows < 1 or max_bytes < 1:
+            raise ValueError(
+                f"backlog budget must be positive, got max_rows={max_rows} "
+                f"max_bytes={max_bytes}")
+        self.max_rows = max_rows
+        self.max_bytes = max_bytes
+        self.rows = 0
+        self.bytes = 0
+        self._lock = threading.Lock()
+
+    def try_admit(self, rows: int, nbytes: int) -> bool:
+        """Reserve budget; False (and no reservation) past either limit."""
+        with self._lock:
+            if self.rows + rows > self.max_rows:
+                return False
+            if self.bytes + nbytes > self.max_bytes:
+                return False
+            self.rows += rows
+            self.bytes += nbytes
+            return True
+
+    def release(self, rows: int, nbytes: int) -> None:
+        """Return budget reserved by a successful ``try_admit``."""
+        with self._lock:
+            self.rows -= rows
+            self.bytes -= nbytes
+
+
+class _Pending:
+    __slots__ = ("x", "tenant", "arrival_s", "promise", "nbytes")
+
+    def __init__(self, x, tenant, arrival_s, promise):
+        self.x = x
+        self.tenant = tenant
+        self.arrival_s = arrival_s
+        self.promise = promise
+        self.nbytes = x.nbytes
+
+
+@dataclasses.dataclass(frozen=True)
+class _Inflight:
+    device_scores: object
+    requests: list
+    bucket: int
+
+
+class AsyncTMServer:
+    """Continuous-batching TM scores server over one (session × bundle).
+
+    >>> server = AsyncTMServer(session, bundle, engine="indexed",
+    ...                        max_batch=32)
+    >>> server.start()
+    >>> promise = server.submit(x_row, tenant="acme")
+    >>> result = promise.wait()     # ScoreResult | Overloaded
+    >>> server.stop()
+
+    The server is placement-blind exactly like the session it wraps: the
+    AOT cache bakes the topology's shardings into its executables, so the
+    same server code serves a laptop session or a data-sharded mesh.
+    ``clock`` is injectable for deterministic tests.
+    """
+
+    def __init__(self, session, bundle, *, engine: str = "indexed",
+                 max_batch: int = 32, aot: AOTBucketCache | None = None,
+                 backlog_rows: int | None = None,
+                 backlog_bytes: int = 64 << 20,
+                 tenant_weights: dict[str, int] | None = None,
+                 inflight: int = 2, clock=time.perf_counter):
+        if aot is None:
+            aot = AOTBucketCache(session, bundle, engines=(engine,),
+                                 max_batch=max_batch)
+        self.session = session
+        self.bundle = bundle
+        self.aot = aot
+        self.engine = engine
+        self.sizes = list(aot.bucket_sizes)
+        self.n_features = aot.n_features
+        top = self.sizes[-1]
+        # default row budget: deep enough that a transient host stall (GIL
+        # contention, a slow result copy) queues rather than rejects — at
+        # high request rates the backlog must absorb tens of milliseconds
+        # of arrivals — yet bounded so sustained overload turns into typed
+        # rejections, not unbounded memory and latency
+        self.backlog = Backlog(
+            max_rows=backlog_rows if backlog_rows is not None
+            else 32 * top * max(inflight, 1),
+            max_bytes=backlog_bytes)
+        self._clock = clock
+        self._tenants = TenantQueues(weights=tenant_weights)
+        self._stats: dict[str, TenantStats] = {}
+        self._cond = threading.Condition()
+        self._inflight: queue.Queue = queue.Queue()
+        self._slots = threading.Semaphore(max(inflight, 1))
+        self._stopping = False
+        self._threads: list[threading.Thread] = []
+        # dispatch-side counters (single writer: the dispatch thread)
+        self.batches = 0
+        self.rows_real = 0
+        self.rows_padded = 0
+        self.completed = 0
+
+    # -- request side -------------------------------------------------------
+
+    def submit(self, x_row, tenant: str = "default") -> Promise:
+        """Admit one ``(n_features,)`` uint8 request row.
+
+        Returns a promise resolving to ``ScoreResult`` — or, when the
+        backlog budget is exhausted, one already resolved to a typed
+        ``Overloaded`` (admission control; the request never queues).
+        """
+        x_row = np.ascontiguousarray(x_row, np.uint8)
+        promise = Promise()
+        arrival = self._clock()
+        with self._cond:
+            stats = self._stats.get(tenant)
+            if stats is None:
+                stats = self._stats[tenant] = TenantStats()
+            if not self.backlog.try_admit(1, x_row.nbytes):
+                stats.rejected += 1
+                promise.resolve(Overloaded(
+                    tenant=tenant, arrival_s=arrival,
+                    backlog_rows=self.backlog.rows,
+                    backlog_bytes=self.backlog.bytes,
+                    max_rows=self.backlog.max_rows,
+                    max_bytes=self.backlog.max_bytes))
+                return promise
+            stats.admitted += 1
+            self._tenants.push(
+                tenant, _Pending(x_row, tenant, arrival, promise))
+            self._cond.notify()
+        return promise
+
+    # -- engine (each phase callable synchronously for tests) ---------------
+
+    def form_batch(self) -> list:
+        """Take up to a top bucket of pending rows (weighted round-robin)."""
+        with self._cond:
+            return self._tenants.take(self.sizes[-1])
+
+    def dispatch(self, reqs: list) -> _Inflight:
+        """Pad one request list to its bucket and dispatch through the AOT
+        cache — asynchronous: returns device arrays, never blocks on
+        compute."""
+        k = len(reqs)
+        b = bucket_for(k, self.sizes)
+        xp = np.zeros((b, self.n_features), np.uint8)
+        for i, r in enumerate(reqs):
+            xp[i] = r.x
+        dev = self.aot(xp, engine=self.engine, bucket=b)
+        self.batches += 1
+        self.rows_real += k
+        self.rows_padded += b
+        return _Inflight(device_scores=dev, requests=reqs, bucket=b)
+
+    def complete(self, item: _Inflight) -> None:
+        """Block on one in-flight batch, resolve its promises, release the
+        backlog budget (per-tenant latency recorded here)."""
+        host = np.asarray(item.device_scores)  # device sync happens here
+        done = self._clock()
+        nbytes = 0
+        with self._cond:
+            for i, r in enumerate(item.requests):
+                r.promise.resolve(ScoreResult(
+                    scores=host[i], tenant=r.tenant,
+                    arrival_s=r.arrival_s, done_s=done))
+                self._stats[r.tenant].record(done - r.arrival_s)
+                nbytes += r.nbytes
+            self.completed += len(item.requests)
+        self.backlog.release(len(item.requests), nbytes)
+
+    def step(self) -> int:
+        """One synchronous dispatch+complete round (unit tests; also a
+        valid single-threaded serving mode). Returns rows served."""
+        reqs = self.form_batch()
+        if not reqs:
+            return 0
+        self.complete(self.dispatch(reqs))
+        return len(reqs)
+
+    # -- threads ------------------------------------------------------------
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            # in-flight backpressure happens *before* batch formation, so
+            # each freed slot's take() sees everything that arrived during
+            # the completed compute window — one batch per window, not
+            # several fragments (see the module docstring). Never blocks
+            # under the lock.
+            self._slots.acquire()
+            with self._cond:
+                while not self._stopping and not len(self._tenants):
+                    self._cond.wait()
+                if self._stopping and not len(self._tenants):
+                    self._slots.release()
+                    break
+                reqs = self._tenants.take(self.sizes[-1])
+            if reqs:
+                self._inflight.put(self.dispatch(reqs))
+            else:
+                self._slots.release()
+        self._inflight.put(None)  # sentinel: drains then stops the results
+
+    def _result_loop(self) -> None:
+        while True:
+            item = self._inflight.get()
+            if item is None:
+                break
+            self.complete(item)
+            self._slots.release()
+
+    def start(self) -> "AsyncTMServer":
+        """Spawn the dispatch and result threads (idempotent)."""
+        if self._threads:
+            return self
+        self._stopping = False
+        self._threads = [
+            threading.Thread(target=self._dispatch_loop,
+                             name="tm-serve-dispatch", daemon=True),
+            threading.Thread(target=self._result_loop,
+                             name="tm-serve-result", daemon=True),
+        ]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def drain(self, timeout: float = 30.0) -> None:
+        """Block until every admitted request has completed."""
+        deadline = time.monotonic() + timeout
+        while self.backlog.rows > 0:
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"{self.backlog.rows} rows still in flight after "
+                    f"{timeout}s")
+            time.sleep(0.001)
+
+    def stop(self) -> None:
+        """Serve out the remaining backlog, then join both threads."""
+        if not self._threads:
+            return
+        with self._cond:
+            self._stopping = True
+            self._cond.notify_all()
+        for t in self._threads:
+            t.join()
+        self._threads = []
+
+    # -- reporting ----------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Cumulative counters + per-tenant ledgers + AOT cache counters
+        (snapshot; loadgen diffs consecutive snapshots per load step)."""
+        with self._cond:
+            per_tenant = {t: s.summary() for t, s in self._stats.items()}
+            batches, rows_real = self.batches, self.rows_real
+            rows_padded, completed = self.rows_padded, self.completed
+        return {
+            "batches": batches,
+            "rows_real": rows_real,
+            "rows_padded": rows_padded,
+            "completed": completed,
+            "backlog_rows": self.backlog.rows,
+            "tenants": per_tenant,
+            "aot": self.aot.counters(),
+        }
+
+
+class _JitBucketRunner:
+    """``AOTBucketCache`` stand-in for the synchronous baseline server.
+
+    Dispatches through the session's ordinary jit cache — compiled lazily
+    per bucket during ``warmup``, which is exactly how the pre-§10 serve
+    loop compiled. Mirrors the AOT cache's counter surface so the
+    loadgen's hot-loop assert applies to the baseline too: the jit cache
+    is likewise frozen once every declared bucket has warmed, because the
+    server only ever pads to those buckets.
+    """
+
+    def __init__(self, session, bundle, *, engines=("indexed",),
+                 bucket_sizes=None, max_batch: int = 32,
+                 warmup: bool = True):
+        if bucket_sizes is None:
+            bucket_sizes = buckets(max_batch,
+                                   min_batch=session.topology.data_shards)
+        self.bucket_sizes = sorted({int(b) for b in bucket_sizes})
+        self.engines = tuple(engines)
+        self.n_features = session.cfg.n_features
+        self._session = session
+        self._bundle = bundle
+        self.lowerings = 0
+        self.hits = 0
+        self.misses = 0
+        self._compile_s: dict[str, dict[str, float]] = {}
+        if warmup:
+            self.warmup()
+
+    def __call__(self, x, *, engine: str, bucket: int) -> jax.Array:
+        """Dispatch one padded batch through ``session.scores`` (jit path,
+        shape-keyed cache — a new shape would retrace, which warmup rules
+        out by pre-touching every bucket)."""
+        self.hits += 1
+        return self._session.scores(self._bundle, jnp.asarray(x),
+                                    engine=engine)
+
+    def warmup(self) -> None:
+        """Compile every (engine × bucket) through the jit cache and block,
+        keeping compilation outside the timed loop like the old loop's
+        warmup pass did. Excluded from the hit counter."""
+        hits = self.hits
+        for engine in self.engines:
+            for b in self.bucket_sizes:
+                t0 = time.perf_counter()
+                x = np.zeros((b, self.n_features), np.uint8)
+                jax.block_until_ready(self(x, engine=engine, bucket=b))
+                self._compile_s.setdefault(engine, {})[str(b)] = round(
+                    time.perf_counter() - t0, 4)
+                self.lowerings += 1
+        self.hits = hits
+
+    def compile_report(self) -> dict:
+        """Per-engine ``{bucket: seconds}`` first-call (compile) times,
+        string-keyed like ``AOTBucketCache.compile_report``."""
+        return {e: dict(t) for e, t in self._compile_s.items()}
+
+    def counters(self) -> dict:
+        """Same counter shape as ``AOTBucketCache.counters`` so loadgen's
+        zero-compilations-in-the-hot-loop assert covers the baseline."""
+        return {"engines": len(self.engines),
+                "buckets": len(self.bucket_sizes),
+                "entries": len(self.engines) * len(self.bucket_sizes),
+                "lowerings": self.lowerings,
+                "hits": self.hits,
+                "misses": self.misses}
+
+
+class SyncTMServer(AsyncTMServer):
+    """The pre-§10 synchronous drain loop behind the modern submit surface
+    — the measured baseline of ``BENCH_tm_serve.json``'s ``sustained_load``.
+
+    One worker thread serialises every phase exactly like the loop
+    ``launch/tm_serve.py`` used to run: take a batch → pad → jit dispatch →
+    *block on device* → complete → repeat. Same admission control, same
+    tenant fairness, same promises as ``AsyncTMServer`` — the only variable
+    left between the two under the same open-loop load generator is the
+    dispatch/compute overlap, which is exactly what the benchmark isolates.
+    Buckets pre-compile through the jit cache at construction, so like the
+    async server it never compiles inside the timed loop.
+    """
+
+    def __init__(self, session, bundle, *, engine: str = "indexed",
+                 max_batch: int = 32, backlog_rows: int | None = None,
+                 backlog_bytes: int = 64 << 20,
+                 tenant_weights: dict[str, int] | None = None,
+                 clock=time.perf_counter, warmup: bool = True):
+        super().__init__(
+            session, bundle, engine=engine, max_batch=max_batch,
+            aot=_JitBucketRunner(session, bundle, engines=(engine,),
+                                 max_batch=max_batch, warmup=warmup),
+            backlog_rows=backlog_rows, backlog_bytes=backlog_bytes,
+            tenant_weights=tenant_weights, inflight=1, clock=clock)
+
+    def _serve_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._stopping and not len(self._tenants):
+                    self._cond.wait()
+                if self._stopping and not len(self._tenants):
+                    return
+                reqs = self._tenants.take(self.sizes[-1])
+            if reqs:
+                item = self.dispatch(reqs)
+                jax.block_until_ready(item.device_scores)
+                self.complete(item)
+
+    def start(self) -> "SyncTMServer":
+        """Spawn the single blocking serve thread (idempotent)."""
+        if self._threads:
+            return self
+        self._stopping = False
+        t = threading.Thread(target=self._serve_loop,
+                             name="tm-serve-sync", daemon=True)
+        self._threads = [t]
+        t.start()
+        return self

@@ -1,0 +1,422 @@
+"""Serving runtime tests (src/repro/serving/, DESIGN.md §10).
+
+Three layers, cheapest first:
+
+  * deterministic units — ``Backlog`` admission arithmetic, typed
+    ``Overloaded`` rejection, weighted round-robin tenant fairness, and
+    latency accounting run against a stub AOT cache and an injectable
+    fake clock: no threads, no jax dispatch, every assertion exact;
+  * integration on a real (tiny) session — the AOT bucket cache compiles
+    exactly one executable per (engine × bucket) and never again
+    (``AOTCacheMiss`` instead of a silent retrace), and both server modes
+    produce bit-exact ``session.scores`` results through their threaded
+    paths;
+  * a ``slow`` subprocess on a forced 4-device host mesh — the async
+    server over ``Topology(data_shards=4)`` stays bit-exact against the
+    sync scores path while its batching regroups rows into different
+    padded buckets than the reference eval.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+# -- deterministic test doubles ---------------------------------------------
+
+
+class FakeClock:
+    """Injectable monotonic clock: time moves only when the test says so."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+class StubAOT:
+    """Duck-typed AOTBucketCache: records calls, computes nothing."""
+
+    def __init__(self, sizes=(1, 2, 4, 8), n_features=6, n_classes=3):
+        self.bucket_sizes = list(sizes)
+        self.n_features = n_features
+        self.n_classes = n_classes
+        self.lowerings = len(sizes)
+        self.hits = 0
+        self.misses = 0
+        self.calls = []
+
+    def __call__(self, x, *, engine, bucket):
+        assert x.shape == (bucket, self.n_features)
+        self.hits += 1
+        self.calls.append((engine, bucket))
+        return np.zeros((bucket, self.n_classes), np.int32)
+
+    def counters(self):
+        return {"engines": 1, "buckets": len(self.bucket_sizes),
+                "entries": len(self.bucket_sizes),
+                "lowerings": self.lowerings, "hits": self.hits,
+                "misses": self.misses}
+
+
+def make_server(**kw):
+    from repro.serving import AsyncTMServer
+
+    stub = kw.pop("aot", None) or StubAOT()
+    clock = kw.pop("clock", None) or FakeClock()
+    server = AsyncTMServer(None, None, engine="stub", aot=stub,
+                           clock=clock, **kw)
+    return server, stub, clock
+
+
+# -- backlog + admission ----------------------------------------------------
+
+
+def test_backlog_bounds_rows_and_bytes():
+    from repro.serving import Backlog
+
+    b = Backlog(max_rows=3, max_bytes=20)
+    assert b.try_admit(1, 6) and b.try_admit(1, 6) and b.try_admit(1, 6)
+    assert not b.try_admit(1, 1)          # row budget exhausted
+    b.release(1, 6)
+    assert b.try_admit(1, 2)              # freed row readmits
+    assert not b.try_admit(1, 7)          # 14 + 7 > 20: byte budget
+    assert (b.rows, b.bytes) == (3, 14)
+    with pytest.raises(ValueError):
+        Backlog(max_rows=0, max_bytes=1)
+    with pytest.raises(ValueError):
+        Backlog(max_rows=1, max_bytes=0)
+
+
+def test_overloaded_typed_rejection_and_release():
+    from repro.serving import Overloaded, ScoreResult
+
+    server, stub, clock = make_server(backlog_rows=4)
+    clock.advance(1.0)
+    admitted = [server.submit(np.zeros(6, np.uint8), tenant="acme")
+                for _ in range(4)]
+    assert not any(p.done for p in admitted)
+
+    rej = server.submit(np.zeros(6, np.uint8), tenant="acme")
+    assert rej.done                        # resolved inside submit
+    over = rej.wait(0)
+    assert isinstance(over, Overloaded)
+    assert over.tenant == "acme" and over.arrival_s == 1.0
+    assert over.backlog_rows == 4 and over.max_rows == 4
+
+    clock.advance(2.5)
+    assert server.step() == 4              # one synchronous round
+    results = [p.wait(0) for p in admitted]
+    assert all(isinstance(r, ScoreResult) for r in results)
+    assert all(r.latency_s == 2.5 for r in results)
+    assert server.backlog.rows == 0        # budget released on completion
+    assert not server.submit(np.zeros(6, np.uint8)).done  # admits again
+
+    stats = server.stats()
+    assert stats["tenants"]["acme"]["admitted"] == 4
+    assert stats["tenants"]["acme"]["rejected"] == 1
+    assert stats["tenants"]["acme"]["latency_ms"]["p50"] == 2500.0
+
+
+def test_byte_budget_rejects_before_row_budget():
+    server, _, _ = make_server(backlog_rows=100, backlog_bytes=20)
+    assert not server.submit(np.zeros(6, np.uint8)).done  # 6 bytes
+    assert not server.submit(np.zeros(6, np.uint8)).done  # 12
+    assert not server.submit(np.zeros(6, np.uint8)).done  # 18
+    assert server.submit(np.zeros(6, np.uint8)).done      # 24 > 20: rejected
+
+
+def test_dispatch_pads_to_bucket():
+    server, stub, _ = make_server()
+    for _ in range(3):
+        server.submit(np.ones(6, np.uint8))
+    assert server.step() == 3
+    assert stub.calls == [("stub", 4)]     # 3 rows pad to the 4-bucket
+
+
+# -- tenant fairness --------------------------------------------------------
+
+
+def test_wrr_hot_tenant_cannot_starve_cold_ones():
+    from repro.serving import TenantQueues
+
+    q = TenantQueues()
+    for i in range(100):
+        q.push("hot", ("hot", i))
+    for t in ("a", "b"):
+        for i in range(3):
+            q.push(t, (t, i))
+    batch = q.take(9)
+    # equal weights: each pass grants one row per tenant, so the flood is
+    # held to its fair share and both cold tenants fully drain
+    assert sum(1 for t, _ in batch if t == "hot") == 3
+    assert sum(1 for t, _ in batch if t == "a") == 3
+    assert sum(1 for t, _ in batch if t == "b") == 3
+    # FIFO preserved within a tenant
+    assert [i for t, i in batch if t == "hot"] == [0, 1, 2]
+    assert len(q) == 97
+
+
+def test_wrr_weights_shape_the_batch():
+    from repro.serving import TenantQueues
+
+    q = TenantQueues(weights={"big": 3})
+    for i in range(10):
+        q.push("big", ("big", i))
+        q.push("small", ("small", i))
+    batch = q.take(8)
+    # per pass: big contributes 3, small 1 → 8 rows = two passes
+    assert sum(1 for t, _ in batch if t == "big") == 6
+    assert sum(1 for t, _ in batch if t == "small") == 2
+    with pytest.raises(ValueError):
+        TenantQueues(weights={"x": 0})
+
+
+def test_wrr_start_rotates_between_takes():
+    from repro.serving import TenantQueues
+
+    q = TenantQueues()
+    for i in range(4):
+        q.push("a", ("a", i))
+        q.push("b", ("b", i))
+    first = q.take(1)[0][0]
+    second = q.take(1)[0][0]
+    assert {first, second} == {"a", "b"}   # no tenant owns the front
+
+
+# -- loadgen records --------------------------------------------------------
+
+
+def test_holds_and_find_knee():
+    from repro.serving import find_knee, holds
+
+    mk = lambda off, ach, rej: {"offered_rps": off, "achieved_rps": ach,
+                                "rejection_rate": rej}
+    assert holds(mk(100, 99, 0.0))
+    assert not holds(mk(100, 70, 0.0))     # fell behind
+    assert not holds(mk(100, 99, 0.02))    # rejecting
+    steps = [mk(100, 99, 0.0), mk(200, 197, 0.0), mk(400, 250, 0.2)]
+    knee = find_knee(steps)
+    assert knee["index"] == 1 and knee["offered_rps"] == 200
+    # nothing holds → fall back to the max-achieved step, and say so
+    knee = find_knee([mk(100, 60, 0.5), mk(200, 90, 0.6)])
+    assert knee["index"] == 1 and "max achieved" in knee["criterion"]
+
+
+def test_poisson_arrivals_deterministic():
+    from repro.serving import poisson_arrivals
+
+    a = poisson_arrivals(100.0, 1.0, np.random.default_rng(7))
+    b = poisson_arrivals(100.0, 1.0, np.random.default_rng(7))
+    np.testing.assert_array_equal(a, b)
+    assert a.size >= 1 and np.all(np.diff(a) >= 0) and a[-1] <= 1.0
+
+
+# -- CLI flag resolution ----------------------------------------------------
+
+
+def test_smoke_flags_are_defaults_not_overrides():
+    from repro.launch.tm_serve import resolve_flags
+
+    r = resolve_flags(True, requests=None, max_batch=None, classes=None)
+    assert r == {"requests": 96, "max_batch": 8, "classes": 4}
+    # explicitly-passed flags win over the smoke defaults
+    r = resolve_flags(True, requests=32, max_batch=None, classes=12)
+    assert r == {"requests": 32, "max_batch": 8, "classes": 12}
+    r = resolve_flags(False, requests=None, engine=None)
+    assert r == {"requests": 512, "engine": "indexed"}
+    with pytest.raises(ValueError):
+        resolve_flags(True, not_a_flag=1)
+
+
+# -- real-session integration ----------------------------------------------
+
+
+def _tiny_session(engines=("indexed",), topology=None):
+    import jax.numpy as jnp
+    from repro.core import TMConfig, TMState
+    from repro.core.session import TMSession
+
+    cfg = TMConfig(n_classes=3, n_clauses=16, n_features=12)
+    rng = np.random.default_rng(0)
+    inc = rng.uniform(size=(3, 16, 24)) < 0.25
+    state = TMState(ta_state=jnp.asarray(
+        np.where(inc, cfg.n_states + 1, cfg.n_states), jnp.int16))
+    session = TMSession(cfg, topology, engines=engines)
+    return session, session.prepare(state), rng
+
+
+def test_aot_cache_compiles_each_bucket_exactly_once():
+    import jax.numpy as jnp
+    from repro.serving import AOTBucketCache, AOTCacheMiss
+
+    session, bundle, rng = _tiny_session()
+    cache = AOTBucketCache(session, bundle, engines=("indexed",),
+                           max_batch=4)
+    assert cache.bucket_sizes == [1, 2, 4]
+    assert cache.counters()["lowerings"] == 3
+
+    x = rng.integers(0, 2, (4, 12)).astype(np.uint8)
+    ref = np.asarray(session.scores(bundle, jnp.asarray(x),
+                                    engine="indexed"))
+    for _ in range(2):                     # repeat calls never re-lower
+        got = np.asarray(cache(x, engine="indexed", bucket=4))
+    np.testing.assert_array_equal(got, ref)
+    c = cache.counters()
+    assert c["lowerings"] == 3 and c["hits"] == 2 and c["misses"] == 0
+
+    with pytest.raises(AOTCacheMiss):
+        cache(np.zeros((3, 12), np.uint8), engine="indexed", bucket=3)
+    with pytest.raises(AOTCacheMiss):
+        cache(x, engine="bitpack", bucket=4)
+    assert cache.counters()["misses"] == 2
+    assert cache.counters()["lowerings"] == 3   # misses never compile
+
+    report = cache.compile_report()
+    assert set(report) == {"indexed"}
+    assert set(report["indexed"]) == {"1", "2", "4"}  # string keys (JSON)
+
+
+@pytest.mark.parametrize("mode", ["async", "sync"])
+def test_server_scores_bit_exact_through_threads(mode):
+    import jax.numpy as jnp
+    from repro.serving import AsyncTMServer, ScoreResult, SyncTMServer
+
+    session, bundle, rng = _tiny_session()
+    cls = AsyncTMServer if mode == "async" else SyncTMServer
+    server = cls(session, bundle, engine="indexed", max_batch=4).start()
+    xs = rng.integers(0, 2, (30, 12)).astype(np.uint8)
+    try:
+        promises = [server.submit(x, tenant=f"t{i % 2}")
+                    for i, x in enumerate(xs)]
+        server.drain(timeout=60)
+        results = [p.wait(10) for p in promises]
+    finally:
+        server.stop()
+    assert all(isinstance(r, ScoreResult) for r in results)
+    ref = np.asarray(session.scores(bundle, jnp.asarray(xs),
+                                    engine="indexed"))
+    np.testing.assert_array_equal(np.stack([r.scores for r in results]), ref)
+
+    stats = server.stats()
+    assert stats["completed"] == 30 and stats["backlog_rows"] == 0
+    assert stats["rows_real"] == 30
+    assert stats["aot"]["misses"] == 0
+    assert set(stats["tenants"]) == {"t0", "t1"}
+    assert (stats["tenants"]["t0"]["served"]
+            + stats["tenants"]["t1"]["served"]) == 30
+
+
+def test_run_step_and_sustained_load_record_shape():
+    from repro.serving import AsyncTMServer, run_step, sustained_load
+
+    session, bundle, rng = _tiny_session()
+    server = AsyncTMServer(session, bundle, engine="indexed",
+                           max_batch=4).start()
+    xs = rng.integers(0, 2, (64, 12)).astype(np.uint8)
+    try:
+        step = run_step(server, xs, rps=300.0, duration_s=0.1,
+                        rng=np.random.default_rng(3))
+        assert {"offered_rps", "achieved_rps", "requests", "completed",
+                "rejected", "rejection_rate", "batches", "mean_batch",
+                "padding_efficiency", "latency_ms"} <= set(step)
+        assert step["completed"] + step["rejected"] == step["requests"]
+        assert {"p50", "p95", "p99", "mean"} == set(step["latency_ms"])
+
+        rec = sustained_load(server, xs, rps_steps=[200.0, 400.0],
+                             step_duration_s=0.1, seed=1)
+    finally:
+        server.stop()
+    assert rec["open_loop"] and rec["engine"] == "indexed"
+    assert len(rec["steps"]) == 2
+    assert rec["knee"]["index"] in (0, 1)
+    assert rec["aot"]["hot_loop_compiles"] == 0
+    assert rec["aot"]["misses"] == 0
+
+
+def test_serve_engine_compile_keys_are_strings():
+    from repro.core import TMConfig
+    from repro.launch.tm_serve import ServePolicy, run
+
+    record = run(TMConfig(n_classes=3, n_clauses=16, n_features=12),
+                 engines=("indexed",), n_requests=12, rps=4000.0,
+                 policy=ServePolicy(max_batch=4))
+    keys = record["engines"]["indexed"]["compile_s_per_bucket"]
+    assert set(keys) == {"1", "2", "4"}    # JSON-stable string keys
+
+
+# -- forced-4-device parity (slow) ------------------------------------------
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import TMConfig, TMState
+    from repro.core.session import TMSession, Topology
+    from repro.serving import AsyncTMServer, SyncTMServer
+
+    cfg = TMConfig(n_classes=5, n_clauses=32, n_features=24)
+    rng = np.random.default_rng(0)
+    inc = rng.uniform(size=(5, 32, 48)) < 0.2
+    state = TMState(ta_state=jnp.asarray(
+        np.where(inc, cfg.n_states + 1, cfg.n_states), jnp.int16))
+    session = TMSession(cfg, Topology(data_shards=4),
+                        engines=("indexed", "bitpack"))
+    assert session.describe()["sharded"], session.describe()
+    bundle = session.prepare(state)
+    xs = rng.integers(0, 2, (64, 24)).astype(np.uint8)
+
+    for engine in ("indexed", "bitpack"):
+        ref = np.asarray(session.scores(bundle, jnp.asarray(xs),
+                                        engine=engine))
+        # async continuous batching regroups the 64 rows into padded
+        # buckets of <= 8 over the 4-way data axis — results must still be
+        # bit-exact against the one-shot sync eval
+        server = AsyncTMServer(session, bundle, engine=engine,
+                               max_batch=8).start()
+        promises = [server.submit(x) for x in xs]
+        server.drain(timeout=120)
+        out = np.stack([p.wait(30).scores for p in promises])
+        server.stop()
+        c = server.aot.counters()
+        assert c["misses"] == 0, c
+        assert c["lowerings"] == c["entries"], c
+        assert np.array_equal(out, ref), f"async mismatch: {engine}"
+        print("serve-async-sharded-bitexact-ok", engine)
+
+    server = SyncTMServer(session, bundle, engine="indexed",
+                          max_batch=8).start()
+    promises = [server.submit(x) for x in xs]
+    server.drain(timeout=120)
+    out = np.stack([p.wait(30).scores for p in promises])
+    server.stop()
+    ref = np.asarray(session.scores(bundle, jnp.asarray(xs),
+                                    engine="indexed"))
+    assert np.array_equal(out, ref), "sync mismatch"
+    print("serve-sync-sharded-bitexact-ok")
+""")
+
+
+@pytest.mark.slow
+def test_async_server_sharded_parity_subprocess():
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    for marker in ("serve-async-sharded-bitexact-ok indexed",
+                   "serve-async-sharded-bitexact-ok bitpack",
+                   "serve-sync-sharded-bitexact-ok"):
+        assert marker in res.stdout, res.stdout + "\n" + res.stderr
