@@ -222,6 +222,90 @@ def backend_topology_sweep(*, engines=("bitpack", "indexed"),
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Sync vs async stale-vote training sweep (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def train_sync_vs_async(*, ks=(0, 1, 4, 16), shard_grid=(2, 4), batch=32,
+                        steps_timed=16, steps_train=48, n_eval=256,
+                        seed=0) -> list[dict]:
+    """Sequential train-step time + accuracy per (async_votes K × shards).
+
+    K=0 is today's synchronous path (one vote psum per class round inside
+    the batch scan + a per-step overflow psum); K>0 trains against the
+    K-step-stale vote sum with the refresh all-reduce amortised into the
+    timed window — so ``speedup_vs_sync`` is exactly the removed-collective
+    win. Every row also trains a fresh machine on the same synthetic
+    binarized-image stream and records its held-out ``accuracy`` next to
+    the K=0 row's (``accuracy_delta``) — the parity the async mode must
+    hold (the gate itself lives in tests/test_tm_async.py; this records
+    the magnitudes). Empty on hosts with fewer devices than
+    ``max(shard_grid)`` (CI forces 4).
+    """
+    from repro.core.session import TMSession, Topology
+    from repro.core.types import init_tm
+
+    if jax.local_device_count() < max(shard_grid):
+        return []
+    cfg = TMConfig(n_classes=10, n_clauses=128, n_features=196,
+                   backend="xla")
+    xs, ys = binarized_images(batch * steps_train + n_eval, cfg.n_features,
+                              cfg.n_classes, seed=seed)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    x_ev, y_ev = xs[:n_eval], ys[:n_eval]
+    xt, yt = xs[n_eval:], ys[n_eval:]
+
+    rows = []
+    for shards in shard_grid:
+        sync_row = None
+        for k in ks:
+            session = TMSession(
+                cfg, Topology(clause_shards=shards, async_votes=k,
+                              engines=("dense",), donate=False))
+            bundle = session.prepare(init_tm(cfg))
+            key = jax.random.key(seed)
+            for i in range(steps_train):  # accuracy + executable warmup
+                key, sub = jax.random.split(key)
+                b0 = i * batch
+                bundle = session.train_step(
+                    bundle, xt[b0:b0 + batch], yt[b0:b0 + batch], sub)
+            bundle = session.refresh_votes(bundle)
+            acc = float(jnp.mean(
+                (session.predict(bundle, x_ev, engine="dense")
+                 == y_ev).astype(jnp.float32)))
+            jax.block_until_ready(bundle.state.ta_state)
+            t0 = time.perf_counter()
+            for i in range(steps_timed):  # amortises the K-step refreshes
+                key, sub = jax.random.split(key)
+                b0 = (i % steps_train) * batch
+                bundle = session.train_step(
+                    bundle, xt[b0:b0 + batch], yt[b0:b0 + batch], sub)
+            jax.block_until_ready(bundle.state.ta_state)
+            step_us = (time.perf_counter() - t0) / steps_timed * 1e6
+            row = {"k": k, "clause_shards": shards,
+                   "data_shards": 1,
+                   "composition": session.describe()["composition"],
+                   "devices": jax.local_device_count(),
+                   "batch": batch, "step_us": step_us, "accuracy": acc}
+            if k == 0:
+                sync_row = row
+            row["accuracy_sync"] = sync_row["accuracy"]
+            row["accuracy_delta"] = acc - sync_row["accuracy"]
+            row["speedup_vs_sync"] = sync_row["step_us"] / step_us
+            rows.append(row)
+    return rows
+
+
+def print_sync_vs_async(rows: list[dict]) -> None:
+    """One line per sync-vs-async row (shared with benchmarks/run.py)."""
+    for r in rows:
+        print(f"sync_vs_async/c{r['clause_shards']}/K={r['k']}"
+              f"[{r['composition']}]: step={r['step_us']:.0f}us "
+              f"speedup={r['speedup_vs_sync']:.2f}x "
+              f"acc={r['accuracy']:.3f} (Δ{r['accuracy_delta']:+.3f})")
+
+
 def run(fast: bool = True, engines=DEFAULT_ENGINES):
     rows = []
     clause_grid = CLAUSE_GRID[:2] if fast else CLAUSE_GRID
@@ -245,18 +329,20 @@ def print_sweep(sweep: list[dict], prefix: str = "sweep") -> None:
 
 
 def write_json(rows, path: str = "BENCH_tm.json",
-               backend_sweep=None) -> None:
+               backend_sweep=None, train_sync_vs_async=None) -> None:
     """Machine-readable perf record, one file per run (tracked across PRs)."""
     payload = {
         "bench": "tm_speedup",
-        "schema": 2,
+        "schema": 3,
         "backend": jax.default_backend(),
         "host": platform.machine(),
         "devices": jax.local_device_count(),
         "units": {"infer_*_us": "us/sample", "train_*_us": "us/sample",
+                  "step_us": "us/step",
                   "work_ratio": "indexed/dense literal inspections"},
         "rows": rows,
         "backend_sweep": backend_sweep or [],
+        "train_sync_vs_async": train_sync_vs_async or [],
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
@@ -277,8 +363,11 @@ def main():
     if args.sweep_only:
         sweep = backend_topology_sweep()
         print_sweep(sweep)
+        sva = train_sync_vs_async()
+        print_sync_vs_async(sva)
         if args.out:
-            write_json([], args.out, backend_sweep=sweep)
+            write_json([], args.out, backend_sweep=sweep,
+                       train_sync_vs_async=sva)
         return
 
     rows = run(fast=not args.full, engines=engines)
@@ -294,8 +383,11 @@ def main():
             for c in cols))
     sweep = backend_topology_sweep()
     print_sweep(sweep)
+    sva = train_sync_vs_async()
+    print_sync_vs_async(sva)
     if args.out:
-        write_json(rows, args.out, backend_sweep=sweep)
+        write_json(rows, args.out, backend_sweep=sweep,
+                   train_sync_vs_async=sva)
 
 
 if __name__ == "__main__":

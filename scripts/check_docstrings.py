@@ -27,6 +27,9 @@ REPO = Path(__file__).resolve().parents[1]
 
 # The public surface the README points users at (ISSUE 5 satellite):
 MODULES = [
+    "src/repro/core/types.py",
+    "src/repro/core/tm.py",
+    "src/repro/core/distributed.py",
     "src/repro/core/api.py",
     "src/repro/core/session.py",
     "src/repro/core/engines.py",

@@ -60,6 +60,10 @@ assert d["topology"]["backend"] == "pallas_interpret", d["topology"]
 # §9: the fired composition rule is part of the topology metadata
 assert d["topology"]["composition"] in (
     "composed_even", "composed_ragged", "clause_only"), d["topology"]
+# §11 satellite: the per-shard row census (where ragged padding lands)
+rows = d["topology"]["shard_rows"]
+assert len(rows) == d["topology"]["clause_shards"], rows
+assert all({"shard", "real_rows", "pad_rows"} <= set(r) for r in rows), rows
 assert "bitpack" in d["engines"], list(d["engines"])
 sweep = {row["devices"]: row for row in d["batch_axis_scaling"]}
 assert set(sweep) == {1, 2, 4}, sweep
@@ -94,8 +98,8 @@ print("BENCH_tm_serve.json well-formed:", ", ".join(d["engines"]),
                              for n, r in sl["engines"].items()})
 EOF
 
-echo "== dryrun --tm (kernel backend routes + the single vote all-reduce) =="
-python -m repro.launch.dryrun --tm
+echo "== dryrun --tm --async-votes (backend routes + vote all-reduce + async stale-vote path) =="
+python -m repro.launch.dryrun --tm --async-votes
 python - <<'EOF'
 import json
 # even cell (PR 3/4 contract) + the previously-indivisible ragged cell (§9)
@@ -113,6 +117,21 @@ for mesh, rule in (("2x4", "composed_even"), ("2x3", "composed_ragged")):
     assert seq["composition"] == rule and seq["all_reduce_only"], seq
     print(f"dryrun --tm {mesh} OK: composition={seq['composition']},",
           {k: v["pallas_call_in_jaxpr"] for k, v in routes.items()})
+# §11: the async route record — zero vote collectives inside the step
+# (nothing at all on a clause-only mesh), exactly one batched all-reduce
+# per K-step refresh, and the sync-minus-async collective arithmetic
+a = json.load(open("results/dryrun/tm/async.json"))
+assert not a["failures"], a["failures"]
+assert set(a["cells"]) == {"1x4/sequential", "2x4/sequential",
+                           "2x4/parallel"}, sorted(a["cells"])
+for key, c in a["cells"].items():
+    assert c["zero_vote_collectives"], (key, c)
+    assert c["one_refresh_all_reduce"], (key, c)
+    assert c["removed_vote_collectives"], (key, c)
+assert a["cells"]["1x4/sequential"]["async_count"] == 0, a["cells"]
+print("dryrun --tm async OK:",
+      {k: f"sync={c['sync_count']} async={c['async_count']} "
+          f"refresh={c['refresh_count']}" for k, c in a["cells"].items()})
 EOF
 
 echo "== BENCH_tm.json backend sweep (engine x backend x topology) =="
@@ -139,8 +158,24 @@ assert ragged, [r["composition"] for r in sweep]
 for r in sweep:
     assert r["infer_us"] > 0 and r["train_us"] > 0, r
     assert r["devices"] == 4, r
+# §11: the sync-vs-async sweep — every K × shards cell present with a
+# positive step time and its accuracy recorded next to the K=0 baseline;
+# the removed vote collectives must show up as a step-time win for at
+# least one K>0 cell on this forced-4-device host
+sva = d["train_sync_vs_async"]
+assert sva, "empty train_sync_vs_async in BENCH_tm.json"
+cells = {(r["k"], r["clause_shards"]) for r in sva}
+assert cells == {(k, s) for k in (0, 1, 4, 16) for s in (2, 4)}, cells
+for r in sva:
+    assert r["step_us"] > 0 and r["devices"] == 4, r
+    assert 0.0 <= r["accuracy"] <= 1.0, r
+    assert {"accuracy_sync", "accuracy_delta", "speedup_vs_sync",
+            "composition"} <= set(r), r
+best = max(r["speedup_vs_sync"] for r in sva if r["k"] > 0)
+assert best > 1.0, f"async never beat sync: best speedup {best:.3f}"
 print(f"BENCH_tm.json backend sweep well-formed: {len(sweep)} cells "
-      f"({len(ragged)} composed_ragged)")
+      f"({len(ragged)} composed_ragged); sync_vs_async {len(sva)} rows, "
+      f"best async speedup {best:.2f}x")
 EOF
 
 echo "CI smoke: OK"

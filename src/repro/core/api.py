@@ -45,23 +45,31 @@ class TMBundle:
     buffer is per clause shard, so the threshold the counter reflects scales
     with ``clause_shards`` — size ``max_events`` for the least-sharded
     placement a state will run on.
+
+    ``vote_acc`` is the double-buffered stale-vote accumulator
+    (``types.VoteAccumulator``) carried only when a sharded topology trains
+    with ``async_votes=K>0`` (DESIGN.md §11); None everywhere else. It is
+    rebuildable state — checkpoints never persist it.
     """
 
     cfg: TMConfig
     state: TMState
     caches: dict[str, Any]
     event_overflow: jax.Array | None = None
+    vote_acc: Any = None
 
     def tree_flatten(self):
-        """Pytree protocol: leaves = (state, caches, overflow), aux = cfg."""
-        return (self.state, self.caches, self.event_overflow), self.cfg
+        """Pytree protocol: leaves = (state, caches, overflow, vote_acc),
+        aux = cfg."""
+        return ((self.state, self.caches, self.event_overflow, self.vote_acc),
+                self.cfg)
 
     @classmethod
     def tree_unflatten(cls, cfg, children):
         """Pytree protocol: rebuild from ``tree_flatten``'s output."""
-        state, caches, event_overflow = children
+        state, caches, event_overflow, vote_acc = children
         return cls(cfg=cfg, state=state, caches=caches,
-                   event_overflow=event_overflow)
+                   event_overflow=event_overflow, vote_acc=vote_acc)
 
     @property
     def index(self) -> indexing.ClauseIndex:
@@ -155,7 +163,7 @@ def sync_caches(bundle: TMBundle, new_state: TMState,
     if bundle.event_overflow is not None:
         overflow = overflow + bundle.event_overflow
     return TMBundle(cfg=bundle.cfg, state=new_state, caches=caches,
-                    event_overflow=overflow)
+                    event_overflow=overflow, vote_acc=bundle.vote_acc)
 
 
 def train_step(

@@ -64,7 +64,8 @@ from repro.core import indexing, tm
 from repro.core.api import (
     DEFAULT_ENGINE, TMBundle, cache_keys_for, resolve_donate)
 from repro.core.engines import CLAUSE_AXIS, cache_provider, get_engine
-from repro.core.types import TMConfig, TMState, clause_polarity, include_mask
+from repro.core.types import (
+    TMConfig, TMState, VoteAccumulator, clause_polarity, include_mask)
 from repro.sharding import shard_map_compat
 
 STATE_PSPEC = TMState(ta_state=P(None, CLAUSE_AXIS, None))
@@ -113,6 +114,21 @@ class ClauseGeometry:
     def n_sub_padded(self) -> int:
         """Per-shard clause rows after sub-slice padding (≥ ``n_local``)."""
         return self.data_shards * self.n_sub if self.composes else self.n_local
+
+    def shard_rows(self) -> list[dict]:
+        """Per-clause-shard row census: ``[{shard, real_rows, pad_rows}]``.
+
+        Padding lands entirely on the trailing shard(s) (§9), so shard ``i``
+        owns ``clamp(n_clauses − i·n_local, 0, n_local)`` real rows. Recorded
+        in ``TMSession.describe()`` → BENCH_tm_serve.json topology metadata —
+        the observability half of the carried-over padding-balance item.
+        """
+        rows = []
+        for i in range(self.clause_shards):
+            real = min(max(self.n_clauses - i * self.n_local, 0), self.n_local)
+            rows.append({"shard": i, "real_rows": real,
+                         "pad_rows": self.n_local - real})
+        return rows
 
 
 def clause_geometry(n_clauses: int, clause_shards: int,
@@ -216,12 +232,53 @@ def _sharded_polarity(cfg: TMConfig, mesh) -> jax.Array:
     return jax.device_put(pol, NamedSharding(mesh, P(CLAUSE_AXIS)))
 
 
-def make_sharded_prepare(cfg: TMConfig, mesh, *, engines=None):
+def vote_acc_pspec(mesh) -> VoteAccumulator:
+    """``VoteAccumulator`` PartitionSpecs: one row per (data × clause) rank.
+
+    The row axis shards jointly over every batch axis and the clause axis
+    (pod-major, clause-minor — matching the mesh's P ordering), so each
+    mesh position owns exactly one ``(1, m)`` local/stale block and one
+    overflow scalar inside shard_map.
+    """
+    row = (*batch_axes(mesh), CLAUSE_AXIS)
+    return VoteAccumulator(local=P(row, None), stale=P(row, None),
+                           overflow=P(row))
+
+
+def vote_ranks(mesh) -> int:
+    """R — total vote ranks (product of batch-axis sizes × clause shards)."""
+    baxes = batch_axes(mesh)
+    d = math.prod(mesh.shape[a] for a in baxes) if baxes else 1
+    return d * clause_shards(mesh)
+
+
+def init_vote_acc(cfg: TMConfig, mesh) -> VoteAccumulator:
+    """Fresh all-zeros accumulator, placed per ``vote_acc_pspec``.
+
+    Zeros are the correct cold start: a zero stale term makes the first
+    window read pure local votes, and the first refresh replaces it with
+    real sums. Explicit per-field device_put (PartitionSpec is a tuple
+    subclass — tree-mapping over a spec tree would descend into it).
+    """
+    r, m = vote_ranks(mesh), cfg.n_classes
+    spec = vote_acc_pspec(mesh)
+    put = lambda arr, s: jax.device_put(arr, NamedSharding(mesh, s))  # noqa: E731
+    return VoteAccumulator(
+        local=put(jnp.zeros((r, m), jnp.int32), spec.local),
+        stale=put(jnp.zeros((r, m), jnp.int32), spec.stale),
+        overflow=put(jnp.zeros((r,), jnp.int32), spec.overflow))
+
+
+def make_sharded_prepare(cfg: TMConfig, mesh, *, engines=None,
+                         async_votes: int = 0):
     """``(TMState) -> TMBundle`` with shard-local caches for every engine.
 
     The state pads to the ragged clause layout and lands clause-sharded
     (``STATE_PSPEC``); each distinct cache slot is built *on its shard*
     from the local state slice — no device ever materialises a full cache.
+    ``async_votes > 0`` additionally seeds the bundle's stale-vote
+    accumulator (``init_vote_acc`` zeros — rebuildable state, never
+    checkpointed).
     """
     geom = geometry(cfg, mesh)
     shards = geom.clause_shards
@@ -241,8 +298,10 @@ def make_sharded_prepare(cfg: TMConfig, mesh, *, engines=None):
         state = pad_state(cfg, state, geom.n_padded)
         state = TMState(ta_state=jax.device_put(state.ta_state, state_sh))
         caches = fn(state) if keys else {}
+        acc = init_vote_acc(cfg, mesh) if async_votes > 0 else None
         return TMBundle(cfg=cfg, state=state, caches=caches,
-                        event_overflow=jnp.zeros((), jnp.int32))
+                        event_overflow=jnp.zeros((), jnp.int32),
+                        vote_acc=acc)
 
     return prepare
 
@@ -316,7 +375,8 @@ def make_sharded_scores(cfg: TMConfig, mesh, *, engine: str = DEFAULT_ENGINE):
 
 def make_sharded_train_step(cfg: TMConfig, mesh, *, engines=None,
                             parallel: bool = False, max_events: int = 4096,
-                            donate: bool | None = None):
+                            donate: bool | None = None,
+                            async_votes: int = 0):
     """``(TMBundle, xs, ys, rng[, mask]) -> TMBundle``, sharded end to end.
 
     Sequential mode keeps the paper's global sample order (online learning
@@ -346,6 +406,17 @@ def make_sharded_train_step(cfg: TMConfig, mesh, *, engines=None,
     contract of ``api.train_step``); omitted → all rows valid. The fired
     composition rule is exposed as ``step.composition`` (and recorded by
     ``dryrun --tm`` / BENCH_tm_serve.json).
+
+    ``async_votes > 0`` compiles the *asynchronous* step (DESIGN.md §11):
+    every class round reads ``live local votes + bundle.vote_acc.stale``
+    instead of psumming, so the step body contains **zero vote
+    collectives** and no per-step overflow psum either (per-rank drop
+    counts accumulate into the accumulator and ride the K-step refresh,
+    ``make_vote_refresh``). The only collectives left are the ones state
+    exactness genuinely requires: the reassembly psum under hierarchical
+    composition, or the delta psum in batch-parallel mode — clause-only
+    async training is collective-free. The step never refreshes the
+    buffer itself; the session owns the K cadence.
     """
     geom = geometry(cfg, mesh)
     n_local = geom.n_local
@@ -446,32 +517,193 @@ def make_sharded_train_step(cfg: TMConfig, mesh, *, engines=None,
         overflow = overflow_in + jax.lax.psum(buf.overflow, CLAUSE_AXIS)
         return new_state, new_caches, overflow
 
-    mask_spec = y_spec  # batch-sharded in parallel mode, replicated otherwise
-    sm = shard_map_compat(
-        local_fn, mesh=mesh,
-        in_specs=(STATE_PSPEC, cache_specs, P(CLAUSE_AXIS), x_spec, y_spec,
-                  P(None), mask_spec, P()),
-        out_specs=(STATE_PSPEC, cache_specs, P()))
-    donate_nums = (0, 1) if resolve_donate(donate) else ()
-    fn = jax.jit(sm, donate_argnums=donate_nums)
+    def local_fn_async(state_l: TMState, caches_l, pol_l, acc_l, xs, ys,
+                       key_data, mask):
+        # Same shard-local structure as local_fn, with the vote psum (and
+        # the per-step overflow psum) deleted: rounds read the accumulator's
+        # stale remote term, vote/overflow stats land in the write buffer.
+        rng = jax.random.wrap_key_data(key_data)
+        start = jax.lax.axis_index(CLAUSE_AXIS) * n_local
+        old_inc = include_mask(cfg, state_l)
+        stale = acc_l.stale[0]  # (m,) — this rank's read buffer
+        local_valid = None
+        if geom.ragged_clauses:
+            local_valid = (start + jnp.arange(n_local)) < cfg.n_clauses
+        if parallel:
+            b_idx = jnp.int32(0)
+            for a in baxes:
+                b_idx = b_idx * mesh.shape[a] + jax.lax.axis_index(a)
+            b_total = (xs.shape[0] * math.prod(mesh.shape[a] for a in baxes)
+                       if baxes else None)
+            new_state, (vs, vc) = tm.update_batch_parallel(
+                cfg, state_l, xs, ys, rng, pol=pol_l,
+                clause_start=start, batch_axes=baxes,
+                batch_start=b_idx * xs.shape[0], batch_total=b_total,
+                mask=mask, clause_mask=local_valid, stale_votes=stale)
+        elif compose:
+            d_idx = jnp.int32(0)
+            for a in all_baxes:
+                d_idx = d_idx * mesh.shape[a] + jax.lax.axis_index(a)
+            off = d_idx * n_sub
+            ta_pad = _pad_rows(state_l.ta_state, 1, n_sub_pad, cfg.n_states)
+            pol_pad = _pad_rows(pol_l, 0, n_sub_pad, 0)
+            sub = TMState(ta_state=jax.lax.dynamic_slice_in_dim(
+                ta_pad, off, n_sub, 1))
+            pol_sub = jax.lax.dynamic_slice_in_dim(pol_pad, off, n_sub, 0)
+            sub_valid = None
+            if geom.composition == COMPOSED_RAGGED or geom.ragged_clauses:
+                rows = off + jnp.arange(n_sub)
+                sub_valid = ((rows < n_local)
+                             & ((start + rows) < cfg.n_clauses))
+            new_sub, (vs, vc) = tm.update_batch_sequential(
+                cfg, sub, xs, ys, rng, pol=pol_sub,
+                clause_start=start + off, mask=mask, clause_mask=sub_valid,
+                stale_votes=stale)
+            # the reassembly psum stays: state composition must be exact —
+            # only the vote *feedback term* is allowed to go stale
+            zeros = jnp.zeros(
+                (state_l.ta_state.shape[0], n_sub_pad,
+                 state_l.ta_state.shape[2]), state_l.ta_state.dtype)
+            assembled = jax.lax.dynamic_update_slice_in_dim(
+                zeros, new_sub.ta_state, off, 1)
+            summed = jax.lax.psum(assembled, all_baxes)
+            new_state = TMState(
+                ta_state=jax.lax.slice_in_dim(summed, 0, n_local, axis=1))
+        else:
+            new_state, (vs, vc) = tm.update_batch_sequential(
+                cfg, state_l, xs, ys, rng, pol=pol_l,
+                clause_start=start, mask=mask, clause_mask=local_valid,
+                stale_votes=stale)
+        buf = indexing.events_from_transition(
+            old_inc, include_mask(cfg, new_state), max_events)
+        new_caches = {k: cache_provider(k).update_cache(
+                          cfg, caches_l[k], new_state, buf.events)
+                      for k in keys}
+        # write buffer: batch-mean local partial votes per touched class
+        # (untouched classes keep their previous estimate); overflow counts
+        # accumulate per rank and drain at the next refresh collective
+        new_local = jnp.where(
+            vc > 0,
+            jnp.round(vs / jnp.maximum(vc, 1)).astype(jnp.int32),
+            acc_l.local[0])
+        acc_out = VoteAccumulator(
+            local=new_local[None], stale=acc_l.stale,
+            overflow=acc_l.overflow + buf.overflow)
+        return new_state, new_caches, acc_out
 
-    def step(bundle: TMBundle, xs, ys, rng, mask=None) -> TMBundle:
-        if mask is None:
-            mask = jnp.ones(xs.shape[0], bool)
-        overflow_in = (bundle.event_overflow
-                       if bundle.event_overflow is not None
-                       else jnp.zeros((), jnp.int32))
-        new_state, new_caches, overflow = fn(
-            bundle.state, bundle.caches, pol, xs, ys,
-            jax.random.key_data(rng), mask, overflow_in)
-        return TMBundle(cfg=cfg, state=new_state, caches=new_caches,
-                        event_overflow=overflow)
+    mask_spec = y_spec  # batch-sharded in parallel mode, replicated otherwise
+    if async_votes > 0:
+        acc_spec = vote_acc_pspec(mesh)
+        sm = shard_map_compat(
+            local_fn_async, mesh=mesh,
+            in_specs=(STATE_PSPEC, cache_specs, P(CLAUSE_AXIS), acc_spec,
+                      x_spec, y_spec, P(None), mask_spec),
+            out_specs=(STATE_PSPEC, cache_specs, acc_spec))
+        donate_nums = (0, 1, 3) if resolve_donate(donate) else ()
+        fn = jax.jit(sm, donate_argnums=donate_nums)
+
+        def step(bundle: TMBundle, xs, ys, rng, mask=None) -> TMBundle:
+            if bundle.vote_acc is None:
+                raise ValueError(
+                    "async_votes > 0 needs a bundle carrying a "
+                    "VoteAccumulator — prepare it with "
+                    "make_sharded_prepare(..., async_votes=K) (or let "
+                    "TMSession.prepare do it)")
+            if mask is None:
+                mask = jnp.ones(xs.shape[0], bool)
+            new_state, new_caches, acc = fn(
+                bundle.state, bundle.caches, pol, bundle.vote_acc, xs, ys,
+                jax.random.key_data(rng), mask)
+            return TMBundle(cfg=cfg, state=new_state, caches=new_caches,
+                            event_overflow=bundle.event_overflow,
+                            vote_acc=acc)
+    else:
+        sm = shard_map_compat(
+            local_fn, mesh=mesh,
+            in_specs=(STATE_PSPEC, cache_specs, P(CLAUSE_AXIS), x_spec,
+                      y_spec, P(None), mask_spec, P()),
+            out_specs=(STATE_PSPEC, cache_specs, P()))
+        donate_nums = (0, 1) if resolve_donate(donate) else ()
+        fn = jax.jit(sm, donate_argnums=donate_nums)
+
+        def step(bundle: TMBundle, xs, ys, rng, mask=None) -> TMBundle:
+            if mask is None:
+                mask = jnp.ones(xs.shape[0], bool)
+            overflow_in = (bundle.event_overflow
+                           if bundle.event_overflow is not None
+                           else jnp.zeros((), jnp.int32))
+            new_state, new_caches, overflow = fn(
+                bundle.state, bundle.caches, pol, xs, ys,
+                jax.random.key_data(rng), mask, overflow_in)
+            return TMBundle(cfg=cfg, state=new_state, caches=new_caches,
+                            event_overflow=overflow,
+                            vote_acc=bundle.vote_acc)
 
     # exposed for the dry-run's HLO assertions (launch/dryrun.py --tm)
     step.jitted, step.pol = fn, pol
     step.geometry = geom
     step.composition = "batch_parallel" if parallel else geom.composition
     return step
+
+
+def make_vote_refresh(cfg: TMConfig, mesh, *, parallel: bool = False,
+                      donate: bool | None = None):
+    """``(TMBundle) -> TMBundle`` — the K-step stale-vote refresh (§11).
+
+    One batched all-reduce: each rank's ``(m,)`` local votes and its
+    overflow scalar pack into a single ``(m+1,)`` psum. The vote axes match
+    the async step's partitioning — every mesh axis under hierarchical
+    composition (ranks own disjoint clause rows), the clause axis alone
+    otherwise (data ranks replicate clause rows, so their totals already
+    agree per rank) — and under composition only data-rank 0 contributes
+    overflow (the ranks record identical drop counts for a clause shard;
+    summing all of them would multiply-count by ``data_shards``).
+
+    Out the other side: ``stale`` holds ``global − own local`` (the remote
+    term the next window reads), per-rank overflow drains to zero, and the
+    bundle's ``event_overflow`` absorbs the window's global drop count —
+    the per-step overflow psum the sync path pays rides this collective
+    instead. Exposes ``refresh.jitted`` for the dry-run's HLO assertions.
+    """
+    geom = geometry(cfg, mesh)
+    all_baxes = batch_axes(mesh)
+    compose = (not parallel) and geom.composes
+    vote_axes = (*all_baxes, CLAUSE_AXIS) if compose else (CLAUSE_AXIS,)
+    m = cfg.n_classes
+    acc_spec = vote_acc_pspec(mesh)
+
+    def local_fn(acc_l, overflow_in):
+        local = acc_l.local[0]      # (m,)
+        oflow = acc_l.overflow[0]   # ()
+        if compose and all_baxes:
+            d_idx = jnp.int32(0)
+            for a in all_baxes:
+                d_idx = d_idx * mesh.shape[a] + jax.lax.axis_index(a)
+            oflow = jnp.where(d_idx == 0, oflow, 0)
+        packed = jnp.concatenate([local, oflow[None].astype(jnp.int32)])
+        total = jax.lax.psum(packed, vote_axes)  # THE one all-reduce per K
+        stale = total[:m] - local
+        acc_out = VoteAccumulator(
+            local=acc_l.local, stale=stale[None],
+            overflow=jnp.zeros_like(acc_l.overflow))
+        return acc_out, overflow_in + total[m]
+
+    sm = shard_map_compat(local_fn, mesh=mesh, in_specs=(acc_spec, P()),
+                          out_specs=(acc_spec, P()))
+    fn = jax.jit(sm, donate_argnums=(0,) if resolve_donate(donate) else ())
+
+    def refresh(bundle: TMBundle) -> TMBundle:
+        if bundle.vote_acc is None:
+            raise ValueError("refresh needs a bundle with a VoteAccumulator")
+        overflow_in = (bundle.event_overflow
+                       if bundle.event_overflow is not None
+                       else jnp.zeros((), jnp.int32))
+        acc, overflow = fn(bundle.vote_acc, overflow_in)
+        return TMBundle(cfg=cfg, state=bundle.state, caches=bundle.caches,
+                        event_overflow=overflow, vote_acc=acc)
+
+    refresh.jitted = fn
+    return refresh
 
 
 # The stateful facade over these factories is ``core/session.py``'s

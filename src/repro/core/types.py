@@ -66,18 +66,22 @@ class TMConfig:
 
     @property
     def n_literals(self) -> int:
+        """2o — total literal count (positive + negated features)."""
         return 2 * self.n_features
 
     @property
     def half_clauses(self) -> int:
+        """n/2 — clauses per polarity."""
         return self.n_clauses // 2
 
     @property
     def resolved_index_capacity(self) -> int:
+        """Inclusion-list capacity (``index_capacity`` or the worst case)."""
         return self.index_capacity if self.index_capacity is not None else self.n_clauses
 
     @property
     def resolved_clause_capacity(self) -> int:
+        """Per-clause literal capacity (``clause_capacity`` or worst case)."""
         return (self.clause_capacity if self.clause_capacity is not None
                 else self.n_literals)
 
@@ -89,15 +93,55 @@ class TMState(NamedTuple):
 
     @property
     def n_classes(self) -> int:
+        """m — classes (leading ``ta_state`` axis)."""
         return self.ta_state.shape[0]
 
     @property
     def n_clauses(self) -> int:
+        """n — clause rows (possibly padded, see DESIGN.md §9)."""
         return self.ta_state.shape[1]
 
     @property
     def n_literals(self) -> int:
+        """2o — literals (trailing ``ta_state`` axis)."""
         return self.ta_state.shape[2]
+
+
+class VoteAccumulator(NamedTuple):
+    """Double-buffered per-class vote sums for asynchronous sharded training.
+
+    The Massively Parallel TM architecture (PAPERS.md, arXiv 2009.04861)
+    shows clause blocks can apply Type I/II feedback against a slightly
+    *stale* global vote sum instead of synchronising per evaluation. This
+    pytree carries that staleness state in the ``TMBundle`` when a topology
+    trains with ``async_votes=K`` (DESIGN.md §11):
+
+      * ``local``    — (R, m) int32: each vote rank's latest *local* partial
+                       vote sum per class (batch mean of the rounds it ran
+                       since the last refresh; rows untouched in a window
+                       keep their previous value). R is the number of vote
+                       ranks — every (data × clause) mesh position.
+      * ``stale``    — (R, m) int32: the read buffer — each rank's stale
+                       estimate of the *remote* partial-vote sum per class
+                       (the refresh-time global sum minus the rank's own
+                       ``local`` row). The training round reads
+                       ``live local + stale`` instead of psumming.
+      * ``overflow`` — (R,) int32: cache-sync events dropped on this rank
+                       since the last refresh; drained into the bundle's
+                       global ``event_overflow`` by the refresh collective
+                       (never by a per-step psum).
+
+    The two (R, m) buffers are the double buffer: ``local`` accumulates
+    while ``stale`` is read; one batched all-reduce every K steps
+    (``distributed.make_vote_refresh``) swaps fresh sums into ``stale``.
+    The accumulator is *rebuildable* state — checkpoints never persist it
+    (a restore starts from zeros, a cold-start transient that decays within
+    one refresh window), so async checkpoints stay topology-free.
+    """
+
+    local: jax.Array     # (R, m) int32 — latest local partial votes
+    stale: jax.Array     # (R, m) int32 — stale remote vote sums (read buffer)
+    overflow: jax.Array  # (R,)  int32 — per-rank dropped events since refresh
 
 
 def init_tm(cfg: TMConfig, rng: jax.Array | None = None) -> TMState:

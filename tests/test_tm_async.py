@@ -1,0 +1,302 @@
+"""Asynchronous stale-vote training (``Topology(async_votes=K)``, §11).
+
+Fast units (no devices needed): topology validation + describe metadata,
+the per-shard row census, and the bundle pytree carrying ``vote_acc``.
+
+Forced-4-device subprocess (``@slow``), covering the ISSUE-7 gates:
+
+  * ``async_votes=0`` is **bit-exact** with today's synchronous sharded
+    path (and with the single-device reference) in both learning modes;
+  * ``async_votes=K>0`` reaches **accuracy parity** with sync training on
+    MNIST-scale synthetic data in both learning modes (xla backend), and
+    the async trajectory itself is **bit-exact across kernel backends**
+    (xla vs pallas_interpret) — together covering "both modes, both
+    backends" without training through the Python-interpreted kernels;
+  * checkpoint round-trip **across topologies**: an async-trained state
+    saves topology-free, restores onto sync and differently-sharded async
+    sessions bit-exactly, and the restored accumulator is fresh zeros
+    (rebuildable state — never persisted);
+  * the collective arithmetic per K steps: async step HLO = sync − 3
+    (two per-round vote psums + the overflow psum removed; zero left on a
+    clause-only mesh) and the refresh is exactly one all-reduce;
+  * exact ``event_overflow`` accounting: with ``max_events=0`` every
+    boundary crossing drops, so the counter must equal the host-side
+    crossing count of the *actual* trajectory — sync counts per step,
+    async holds the counter frozen between refreshes and drains the
+    accumulated window total through the refresh collective.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.core.distributed import clause_geometry
+from repro.core.session import Topology
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def test_topology_async_votes_validation():
+    assert Topology().async_votes == 0
+    assert Topology(clause_shards=2, async_votes=4).describe()[
+        "async_votes"] == 4
+    with pytest.raises(ValueError, match="async_votes"):
+        Topology(async_votes=-1)
+
+
+def test_async_votes_requires_sharded_placement():
+    from repro.core import TMConfig, TMSession
+    cfg = TMConfig(n_classes=2, n_clauses=4, n_features=4)
+    with pytest.raises(ValueError, match="sharded"):
+        TMSession(cfg, Topology(async_votes=2))
+
+
+def test_shard_rows_census():
+    # even: no padding anywhere
+    g = clause_geometry(16, 4, 1)
+    assert g.shard_rows() == [
+        {"shard": i, "real_rows": 4, "pad_rows": 0} for i in range(4)]
+    # ragged: padding lands entirely on the trailing shard(s)
+    g = clause_geometry(10, 4, 1)  # n_local=3 -> rows 3,3,3,1(+2 pad)
+    assert g.shard_rows() == [
+        {"shard": 0, "real_rows": 3, "pad_rows": 0},
+        {"shard": 1, "real_rows": 3, "pad_rows": 0},
+        {"shard": 2, "real_rows": 3, "pad_rows": 0},
+        {"shard": 3, "real_rows": 1, "pad_rows": 2}]
+    assert sum(r["real_rows"] for r in g.shard_rows()) == 10
+
+
+def test_bundle_pytree_carries_vote_acc():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import TMConfig
+    from repro.core.api import init_bundle
+    from repro.core.types import VoteAccumulator
+
+    cfg = TMConfig(n_classes=2, n_clauses=4, n_features=4)
+    b = init_bundle(cfg, engines=("dense",))
+    assert b.vote_acc is None
+    leaves, treedef = jax.tree.flatten(b)
+    assert jax.tree.unflatten(treedef, leaves).vote_acc is None
+    acc = VoteAccumulator(local=jnp.zeros((1, 2), jnp.int32),
+                          stale=jnp.zeros((1, 2), jnp.int32),
+                          overflow=jnp.zeros((1,), jnp.int32))
+    b2 = jax.tree.unflatten(*reversed(jax.tree.flatten(
+        type(b)(cfg=cfg, state=b.state, caches=b.caches,
+                event_overflow=b.event_overflow, vote_acc=acc))))
+    assert isinstance(b2.vote_acc, VoteAccumulator)
+    assert b2.vote_acc.local.shape == (1, 2)
+
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+    import tempfile
+    import jax, jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (
+        TMConfig, TMSession, TMState, Topology, init_bundle, train_step)
+    from repro.core.distributed import (
+        make_sharded_prepare, make_sharded_train_step, make_vote_refresh)
+    from repro.core.types import include_mask, init_tm
+    from repro.data.synthetic import binarized_images
+    from repro.launch import hlo as hlo_mod
+
+    cfg = TMConfig(n_classes=3, n_clauses=16, n_features=12, n_states=50,
+                   s=3.0, threshold=4)
+    ALL = cfg.n_classes * cfg.n_clauses * cfg.n_literals
+    rng = np.random.default_rng(0)
+    inc0 = rng.uniform(size=(3, 16, 24)) < 0.4
+    state0 = TMState(ta_state=jnp.asarray(
+        np.where(inc0, cfg.n_states + 1, cfg.n_states), jnp.int16))
+
+    def batches(n, b, seed=1):
+        r = np.random.default_rng(seed)
+        key = jax.random.key(seed)
+        for _ in range(n):
+            key, sub = jax.random.split(key)
+            yield (jnp.asarray(r.integers(0, 2, (b, 12)), jnp.uint8),
+                   jnp.asarray(r.integers(0, 3, b), jnp.int32), sub)
+
+    # ---- K=0 is bit-exact with the sync sharded path + the reference ----
+    for parallel in (False, True):
+        sess0 = TMSession(cfg, Topology(clause_shards=4, async_votes=0),
+                          parallel=parallel, max_events=ALL)
+        sess_sync = TMSession(cfg, Topology(clause_shards=4),
+                              parallel=parallel, max_events=ALL)
+        b0, bs, ref = (sess0.prepare(state0), sess_sync.prepare(state0),
+                       init_bundle(cfg, state=state0))
+        for bx, by, sub in batches(3, 8):
+            b0 = sess0.train_step(b0, bx, by, sub)
+            bs = sess_sync.train_step(bs, bx, by, sub)
+            ref = train_step(ref, bx, by, sub, parallel=parallel,
+                             max_events=ALL)
+        np.testing.assert_array_equal(np.asarray(b0.state.ta_state),
+                                      np.asarray(bs.state.ta_state))
+        np.testing.assert_array_equal(np.asarray(b0.state.ta_state),
+                                      np.asarray(ref.state.ta_state))
+        assert b0.vote_acc is None
+    print("tm-async-k0-bitexact-ok")
+
+    # ---- K>0 accuracy parity, both learning modes (MNIST-scale) ----
+    # benchmark-proven scale (benchmarks/tm_speedup.train_sync_vs_async):
+    # 128 clauses / batch 32 converges on this task, so parity is a tight
+    # check rather than noise around a half-trained model
+    mcfg = TMConfig(n_classes=10, n_clauses=128, n_features=196)
+    xs, ys = binarized_images(32 * 36 + 256, 196, 10, seed=3)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    x_ev, y_ev = xs[:256], ys[:256]
+    xt, yt = xs[256:], ys[256:]
+    for parallel in (False, True):
+        accs = {}
+        for k in (0, 4):
+            sess = TMSession(
+                mcfg, Topology(clause_shards=4, async_votes=k,
+                               engines=("dense",)), parallel=parallel)
+            b = sess.prepare(init_tm(mcfg))
+            key = jax.random.key(7)
+            for i in range(36):
+                key, sub = jax.random.split(key)
+                s0 = i * 32
+                b = sess.train_step(b, xt[s0:s0+32], yt[s0:s0+32], sub)
+            b = sess.refresh_votes(b)
+            accs[k] = float(jnp.mean(
+                (sess.predict(b, x_ev, engine="dense") == y_ev)
+                .astype(jnp.float32)))
+        base = float(jnp.mean((y_ev == 0).astype(jnp.float32)))
+        assert accs[0] > base + 0.2, (parallel, accs, base)
+        assert abs(accs[4] - accs[0]) <= 0.10, (parallel, accs)
+        print(f"tm-async-parity parallel={parallel} "
+              f"sync={accs[0]:.3f} async={accs[4]:.3f}")
+    print("tm-async-accuracy-parity-ok")
+
+    # ---- async trajectory bit-exact across kernel backends ----
+    states = {}
+    for backend in ("xla", "pallas_interpret"):
+        sess = TMSession(cfg, Topology(clause_shards=4, async_votes=2,
+                                       backend=backend), max_events=ALL)
+        b = sess.prepare(state0)
+        for bx, by, sub in batches(4, 8):
+            b = sess.train_step(b, bx, by, sub)
+        states[backend] = np.asarray(b.state.ta_state)
+    np.testing.assert_array_equal(states["xla"], states["pallas_interpret"])
+    print("tm-async-backend-bitexact-ok")
+
+    # ---- checkpoint round-trip across topologies: accumulator rebuilt ----
+    with tempfile.TemporaryDirectory() as tmp:
+        sess_a = TMSession(cfg, Topology(clause_shards=4, async_votes=2),
+                           max_events=ALL)
+        b = sess_a.prepare(state0)
+        for bx, by, sub in batches(3, 8):   # mid-window on purpose
+            b = sess_a.train_step(b, bx, by, sub)
+        assert b.vote_acc is not None
+        assert np.asarray(b.vote_acc.stale).any()  # a refresh happened
+        sess_a.save(tmp, b, step=3)
+        want = np.asarray(sess_a.unpad_state(b.state).ta_state)
+        # restore onto: a sync session, and a differently-sharded async one
+        for topo in (Topology(clause_shards=2),
+                     Topology(clause_shards=2, data_shards=2,
+                              async_votes=8)):
+            sess_b = TMSession(cfg, topo, max_events=ALL)
+            rb, step = sess_b.restore(tmp)
+            assert step == 3
+            np.testing.assert_array_equal(
+                np.asarray(sess_b.unpad_state(rb.state).ta_state), want)
+            if topo.async_votes:
+                # rebuildable state: fresh zeros on the new topology
+                assert not np.asarray(rb.vote_acc.local).any()
+                assert not np.asarray(rb.vote_acc.stale).any()
+                assert not np.asarray(rb.vote_acc.overflow).any()
+            else:
+                assert rb.vote_acc is None
+    print("tm-async-checkpoint-roundtrip-ok")
+
+    # ---- collective count per K steps (async = sync - 3; refresh = 1) ----
+    from repro.launch.mesh import make_host_mesh
+    ccfg = TMConfig(n_classes=3, n_clauses=16, n_features=12)
+    for mesh_kw, parallel in ((dict(data=1, model=4), False),
+                              (dict(data=2, model=2), False),
+                              (dict(data=2, model=2), True)):
+        mesh = make_host_mesh(**mesh_kw)
+        bundle = make_sharded_prepare(ccfg, mesh, async_votes=4)(
+            init_tm(ccfg))
+        txs = jnp.zeros((4, ccfg.n_features), jnp.uint8)
+        tys = jnp.zeros((4,), jnp.int32)
+        tmask = jnp.ones((4,), bool)
+        kd = jax.random.key_data(jax.random.key(0))
+        counts = {}
+        for tag, k in (("sync", 0), ("async", 4)):
+            step = make_sharded_train_step(ccfg, mesh, parallel=parallel,
+                                           max_events=64, async_votes=k)
+            args = ((bundle.state, bundle.caches, step.pol,
+                     bundle.vote_acc, txs, tys, kd, tmask) if k else
+                    (bundle.state, bundle.caches, step.pol, txs, tys, kd,
+                     tmask, jnp.zeros((), jnp.int32)))
+            counts[tag] = hlo_mod.collective_stats(
+                step.jitted.lower(*args).compile().as_text()).count
+        assert counts["async"] == counts["sync"] - 3, (mesh_kw, counts)
+        if mesh_kw == dict(data=1, model=4) and not parallel:
+            assert counts["async"] == 0, counts
+        refresh = make_vote_refresh(ccfg, mesh, parallel=parallel)
+        rstats = hlo_mod.collective_stats(
+            refresh.jitted.lower(bundle.vote_acc,
+                                 jnp.zeros((), jnp.int32))
+            .compile().as_text())
+        assert rstats.count == 1, rstats.by_kind
+        assert set(rstats.by_kind) == {"all-reduce"}, rstats.by_kind
+    print("tm-async-collective-count-ok")
+
+    # ---- exact event_overflow accounting (max_events=0 drops all) ----
+    def crossings(a, b):
+        return int(np.sum(np.asarray(include_mask(cfg, a))
+                          != np.asarray(include_mask(cfg, b))))
+
+    for topo in (Topology(clause_shards=4, async_votes=2),
+                 Topology(clause_shards=2, data_shards=2, async_votes=2)):
+        sess = TMSession(cfg, topo, engines=("dense",), max_events=0)
+        sync = TMSession(cfg, dataclasses.replace(topo, async_votes=0),
+                         engines=("dense",), max_events=0)
+        b, bsync = sess.prepare(state0), sync.prepare(state0)
+        expected = 0
+        for i, (bx, by, sub) in enumerate(batches(4, 8)):
+            prev = sess.unpad_state(b.state)
+            b = sess.train_step(b, bx, by, sub)
+            expected += crossings(prev, sess.unpad_state(b.state))
+            got = int(jax.device_get(b.event_overflow))
+            if (i + 1) % topo.async_votes == 0:   # refresh just ran
+                assert got == expected, (i, got, expected)
+            # sync counts every step exactly
+            prev_s = sync.unpad_state(bsync.state)
+            bsync = sync.train_step(bsync, bx, by, sub)
+            assert int(jax.device_get(bsync.event_overflow)) > 0
+        # mid-window freeze: train one more step, counter must not move
+        before = int(jax.device_get(b.event_overflow))
+        for bx, by, sub in batches(1, 8, seed=9):
+            b = sess.train_step(b, bx, by, sub)
+        assert int(jax.device_get(b.event_overflow)) == before
+        # forced refresh drains the pending window total
+        prev = sess.unpad_state(b.state)
+        b2 = sess.refresh_votes(b)
+        assert int(jax.device_get(b2.event_overflow)) >= before
+    print("tm-async-overflow-accounting-ok")
+""")
+
+
+@pytest.mark.slow
+def test_tm_async_subprocess():
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    for marker in ("tm-async-k0-bitexact-ok",
+                   "tm-async-accuracy-parity-ok",
+                   "tm-async-backend-bitexact-ok",
+                   "tm-async-checkpoint-roundtrip-ok",
+                   "tm-async-collective-count-ok",
+                   "tm-async-overflow-accounting-ok"):
+        assert marker in res.stdout, res.stdout + "\n" + res.stderr

@@ -54,8 +54,11 @@ SCRIPT = textwrap.dedent("""
     stm = TMSession(cfg, mesh=mesh, max_events=ALL)
     assert stm.describe() == {"clause_shards": 4, "data_shards": 2,
                               "devices": 8, "sharded": True,
-                              "backend": "xla",
-                              "composition": "composed_even"}, stm.describe()
+                              "backend": "xla", "async_votes": 0,
+                              "composition": "composed_even",
+                              "shard_rows": [
+                                  {"shard": i, "real_rows": 4, "pad_rows": 0}
+                                  for i in range(4)]}, stm.describe()
     sb = stm.prepare(state)
 
     # ---- scores parity: every registered engine, bit-exact vs dense ----
