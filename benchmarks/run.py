@@ -61,7 +61,11 @@ def main() -> None:
     # --- engine × backend × topology sweep (kernel backend registry) ------
     sweep = tm_speedup.backend_topology_sweep()
     tm_speedup.print_sweep(sweep, prefix="tm/sweep")
-    tm_speedup.write_json(rows, backend_sweep=sweep)
+
+    # --- indexed vs dense speedup curve (matmul-form Eq. 4, schema 4) ------
+    curve = tm_speedup.indexed_speedup_curve()
+    tm_speedup.print_indexed_speedup(curve)
+    tm_speedup.write_json(rows, backend_sweep=sweep, indexed_speedup=curve)
 
     # --- paper §3 Remarks: analytic work ratios at paper scale ------------
     from repro.core.indexing import dense_work

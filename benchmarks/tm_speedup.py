@@ -110,8 +110,9 @@ def bench_cell(exp, n_clauses: int, *, engines=DEFAULT_ENGINES,
         eng = get_engine(name)
         cache = jax.jit(lambda s, e=eng: e.prepare(cfg, s))(state)
         fn = jax.jit(lambda c, x, e=eng: e.scores(cfg, c, x))
-        xs_t = x_eval if name != "indexed" else x_eval[:2]
-        r[f"infer_{name}_us"] = _timeit(fn, cache, xs_t) / xs_t.shape[0] * 1e6
+        # every engine times the full eval batch — the matmul-form indexed
+        # path removed the old 2-sample truncation (no residual cap)
+        r[f"infer_{name}_us"] = _timeit(fn, cache, x_eval) / n_eval * 1e6
     if "dense" in engines:
         for name in engines:
             if name != "dense":
@@ -223,6 +224,55 @@ def backend_topology_sweep(*, engines=("bitpack", "indexed"),
 
 
 # ---------------------------------------------------------------------------
+# Indexed vs dense speedup curve (the paper's headline claim, schema 4)
+# ---------------------------------------------------------------------------
+
+
+def indexed_speedup_curve(*, clause_grid=(64, 256), avg_lens=(8.0, 58.0),
+                          n_features=196, n_eval=32, seed=0) -> list[dict]:
+    """Indexed-vs-dense inference over (n_clauses × clause sparsity).
+
+    The paper's Tables 1–2 trend in miniature: speedup grows with clause
+    count and with sparsity (short clauses → tiny work ratio). Both engines
+    time the *full* eval batch through the registry on the ``xla`` backend
+    (the indexed route is the matmul-form Eq. 4 body); ``work_ratio`` is
+    the hardware-independent §3 Remarks quantity recorded next to the
+    measured wall-clock ratio. CI gates the sparsest high-clause cell:
+    indexed must strictly beat dense there.
+    """
+    rows = []
+    for n_c in clause_grid:
+        for avg_len in avg_lens:
+            cfg = TMConfig(n_classes=10, n_clauses=n_c,
+                           n_features=n_features, backend="xla",
+                           index_capacity=n_c)
+            state = synthetic_trained_state(cfg, avg_len, seed)
+            rng = np.random.default_rng(seed)
+            xs = jnp.asarray(rng.integers(0, 2, (n_eval, n_features)),
+                             jnp.uint8)
+            row = {"n_clauses": n_c, "avg_clause_len": avg_len,
+                   "features": n_features,
+                   "work_ratio": work_ratio(cfg, state, xs)}
+            for name in ("dense", "indexed"):
+                eng = get_engine(name)
+                cache = jax.jit(lambda s, e=eng: e.prepare(cfg, s))(state)
+                fn = jax.jit(lambda c, x, e=eng: e.scores(cfg, c, x))
+                row[f"infer_{name}_us"] = _timeit(fn, cache, xs) / n_eval * 1e6
+            row["speedup"] = row["infer_dense_us"] / row["infer_indexed_us"]
+            rows.append(row)
+    return rows
+
+
+def print_indexed_speedup(rows: list[dict]) -> None:
+    """One line per indexed-speedup cell (shared with benchmarks/run.py)."""
+    for r in rows:
+        print(f"indexed_speedup/n{r['n_clauses']}/len{r['avg_clause_len']:g}:"
+              f" dense={r['infer_dense_us']:.2f}us"
+              f" indexed={r['infer_indexed_us']:.2f}us"
+              f" speedup={r['speedup']:.2f}x work={r['work_ratio']:.4f}")
+
+
+# ---------------------------------------------------------------------------
 # Sync vs async stale-vote training sweep (DESIGN.md §11)
 # ---------------------------------------------------------------------------
 
@@ -329,11 +379,12 @@ def print_sweep(sweep: list[dict], prefix: str = "sweep") -> None:
 
 
 def write_json(rows, path: str = "BENCH_tm.json",
-               backend_sweep=None, train_sync_vs_async=None) -> None:
+               backend_sweep=None, train_sync_vs_async=None,
+               indexed_speedup=None) -> None:
     """Machine-readable perf record, one file per run (tracked across PRs)."""
     payload = {
         "bench": "tm_speedup",
-        "schema": 3,
+        "schema": 4,
         "backend": jax.default_backend(),
         "host": platform.machine(),
         "devices": jax.local_device_count(),
@@ -343,6 +394,7 @@ def write_json(rows, path: str = "BENCH_tm.json",
         "rows": rows,
         "backend_sweep": backend_sweep or [],
         "train_sync_vs_async": train_sync_vs_async or [],
+        "indexed_speedup": indexed_speedup or [],
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
@@ -363,11 +415,13 @@ def main():
     if args.sweep_only:
         sweep = backend_topology_sweep()
         print_sweep(sweep)
+        curve = indexed_speedup_curve()
+        print_indexed_speedup(curve)
         sva = train_sync_vs_async()
         print_sync_vs_async(sva)
         if args.out:
             write_json([], args.out, backend_sweep=sweep,
-                       train_sync_vs_async=sva)
+                       train_sync_vs_async=sva, indexed_speedup=curve)
         return
 
     rows = run(fast=not args.full, engines=engines)
@@ -383,11 +437,13 @@ def main():
             for c in cols))
     sweep = backend_topology_sweep()
     print_sweep(sweep)
+    curve = indexed_speedup_curve()
+    print_indexed_speedup(curve)
     sva = train_sync_vs_async()
     print_sync_vs_async(sva)
     if args.out:
         write_json(rows, args.out, backend_sweep=sweep,
-                   train_sync_vs_async=sva)
+                   train_sync_vs_async=sva, indexed_speedup=curve)
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ MODULES = [
     "src/repro/core/session.py",
     "src/repro/core/engines.py",
     "src/repro/kernels/backend.py",
+    "src/repro/kernels/indexed.py",
     "src/repro/checkpoint/tm_store.py",
     "src/repro/serving/__init__.py",
     "src/repro/serving/aot.py",

@@ -112,6 +112,16 @@ for mesh, rule in (("2x4", "composed_even"), ("2x3", "composed_ragged")):
     pi = routes["pallas_interpret"]
     assert pi["pallas_call_in_jaxpr"] and pi["one_vote_all_reduce"], pi
     assert not routes["xla"]["pallas_call_in_jaxpr"], routes["xla"]
+    # the indexed engine's matmul-form Eq. 4 routes the same way
+    # (indexed_votes primitive: pallas_call ⇔ pallas backend, the one vote
+    # all-reduce unchanged), and its train leg covers index_update — the
+    # batched replay keeps the step all-reduce-only on both backends (§12)
+    ipi = routes["indexed_pallas_interpret"]
+    assert ipi["pallas_call_in_jaxpr"] and ipi["one_vote_all_reduce"], ipi
+    assert ipi["train_step_all_reduce_only"], ipi
+    ix = routes["indexed_xla"]
+    assert not ix["pallas_call_in_jaxpr"], ix
+    assert ix["one_vote_all_reduce"] and ix["train_step_all_reduce_only"], ix
     # the route record names which composition rule fired (§9)
     seq = d["train_step_sequential"]
     assert seq["composition"] == rule and seq["all_reduce_only"], seq
@@ -141,6 +151,7 @@ XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 python - <<'EOF'
 import json
 d = json.load(open("BENCH_tm.json"))
+assert d["schema"] == 4, f"expected schema 4, got {d.get('schema')}"
 sweep = d["backend_sweep"]
 assert sweep, "empty backend_sweep in BENCH_tm.json"
 cells = {(r["engine"], r["backend"], r["clause_shards"], r["data_shards"])
@@ -173,9 +184,20 @@ for r in sva:
             "composition"} <= set(r), r
 best = max(r["speedup_vs_sync"] for r in sva if r["k"] > 0)
 assert best > 1.0, f"async never beat sync: best speedup {best:.3f}"
+# §12: the indexed-vs-dense speedup curve (schema 4) — work_ratio present
+# on every cell, and at the paper-like sparse high-clause cell the
+# matmul-form indexed engine must strictly beat dense on the full batch
+curve = d["indexed_speedup"]
+assert curve, "empty indexed_speedup in BENCH_tm.json"
+for r in curve:
+    assert r["work_ratio"] > 0, r
+    assert r["infer_dense_us"] > 0 and r["infer_indexed_us"] > 0, r
+sparse = min(curve, key=lambda r: (-r["n_clauses"], r["avg_clause_len"]))
+assert sparse["infer_indexed_us"] < sparse["infer_dense_us"], sparse
 print(f"BENCH_tm.json backend sweep well-formed: {len(sweep)} cells "
       f"({len(ragged)} composed_ragged); sync_vs_async {len(sva)} rows, "
-      f"best async speedup {best:.2f}x")
+      f"best async speedup {best:.2f}x; indexed_speedup {len(curve)} cells, "
+      f"sparse high-clause cell {sparse['speedup']:.2f}x")
 EOF
 
 echo "CI smoke: OK"

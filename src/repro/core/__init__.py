@@ -31,6 +31,7 @@ from repro.core.indexing import (
     dense_work,
     empty_index,
     events_from_transition,
+    index_update,
     indexed_scores,
     indexed_work,
     insert,
@@ -65,7 +66,8 @@ __all__ = [
     "build_index", "compact", "compact_apply_events", "compact_eval",
     "compact_scores", "delete", "dense_work", "empty_index",
     "EventBuffer",
-    "events_from_transition", "indexed_scores", "indexed_work", "insert",
+    "events_from_transition", "index_update", "indexed_scores",
+    "indexed_work", "insert",
     "validate", "validate_compact", "EvalEngine", "get_engine", "register_engine",
     "registered_engines", "TMBundle", "TMSession", "Topology",
     "TsetlinMachine", "bundle_predict", "bundle_scores", "init_bundle",

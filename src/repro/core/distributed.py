@@ -48,7 +48,13 @@ index's lists capacity rows and counts) tile as opaque blocks along
 interpreted through shard_map with the engine's declared spec. The indexed
 engine's shard therefore owns complete falsification lists over *its own*
 clauses (local ids, dense under padding), which is what makes the
-falsified-union shard-local and the partial votes additive.
+falsified-union shard-local and the partial votes additive — and since the
+shard's position-matrix slice carries the same membership information
+(``pos != NA`` ⇔ local include), the matmul-form Eq. 4 body
+(``indexed_votes``, DESIGN.md §12) evaluates the shard's partial votes
+with no list walk at all; batched index maintenance (``index_update``)
+replays each shard's own event buffer shard-locally, exactly like the
+scan it replaced.
 """
 from __future__ import annotations
 

@@ -47,7 +47,7 @@ from repro.core import indexing, tm
 from repro.core.bitpack import WORD, pack_bits, packed_literals
 from repro.core.indexing import Event
 from repro.core.types import (
-    TMConfig, TMState, clause_polarity, include_mask)
+    TMConfig, TMState, clause_polarity, include_mask, literals_from_input)
 from repro.kernels import backend as kbackend
 
 # Mesh axis name the clause dimension shards over (production meshes call
@@ -306,19 +306,31 @@ class CompactEngine(EvalEngine):
 
 
 class IndexedEngine(EvalEngine):
-    """Inclusion lists + O(1) swap-with-last maintenance (paper §3)."""
+    """Inclusion lists + batched O(events) maintenance (paper §3).
+
+    Both hot paths resolve through the kernel backend registry: scoring is
+    the matmul-form Eq. 4 over the position matrix's membership mask
+    (``indexed_votes`` — XLA GEMM body or the fused Pallas kernel per
+    ``cfg.backend``), maintenance the batched event replay
+    (``index_update``). The sequential ``indexing.apply_events`` scan stays
+    as the semantics oracle, not the production route.
+    """
 
     name = "indexed"
+
+    def _votes(self, cfg: TMConfig):
+        return kbackend.resolve("indexed_votes", cfg.backend)
 
     def prepare(self, cfg: TMConfig, state: TMState) -> indexing.ClauseIndex:
         return indexing.build_index(cfg, state, cfg.resolved_index_capacity)
 
     def scores(self, cfg, cache, x):
-        return indexing.indexed_scores(cfg, cache, x)
+        return self._votes(cfg)(cache.pos, literals_from_input(x),
+                                clause_polarity(cfg))
 
     def update_cache(self, cfg, cache, state, events):
         del state
-        return indexing.apply_events(cache, events)
+        return indexing.index_update(cache, events, backend=cfg.backend)
 
     def cache_pspec(self, cfg):
         # Per-shard falsification lists: each shard owns complete lists over
@@ -335,7 +347,7 @@ class IndexedEngine(EvalEngine):
         return indexing.build_index(cfg, state, cap)
 
     def partial_scores(self, cfg, cache, x, pol):
-        return indexing.indexed_partial_scores(cache, x, pol)
+        return self._votes(cfg)(cache.pos, literals_from_input(x), pol)
 
 
 register_engine(DenseEngine())

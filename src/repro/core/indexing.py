@@ -6,9 +6,18 @@ Three structures, all fixed-shape functional pytrees:
     rows of clause ids) + counts ``n[i,k]`` + position matrix ``M[i,j,k]``.
     ``insert``/``delete`` are the paper's O(1) swap-with-last updates as O(1)
     functional scatters.
-  * ``indexed_scores`` — the paper's inference: iterate *false* literals,
-    union their inclusion lists, score by falsified-clause cardinalities
-    (Eq. 4).
+  * ``indexed_scores`` — the paper's inference (Eq. 4): a sample's false
+    literals falsify exactly the clauses in their inclusion lists. The hot
+    body is the *matmul form*: ``pos != NA`` is the membership/include mask
+    (``validate`` pins the identity), so the falsified-union is one
+    contraction of false-literal indicators against it — no list walk, no
+    scatter (``kernels/indexed.py``; routed per ``TMConfig.backend`` through
+    the ``indexed_votes`` registry primitive).
+  * ``index_update`` — batched O(events) replay of a masked event buffer
+    (the ``index_update`` primitive): net events per TA cell, group per
+    inclusion list via segment-cumsum, one vectorised scatter per buffer.
+    Order-equivalent to the sequential ``apply_events`` oracle (kept, and
+    pinned equivalent by property tests) with exact overflow accounting.
   * ``compact`` / ``compact_eval`` — the transpose (clause → included-literal
     indices), the gather-friendly layout a TPU prefers; work ∝ n·ℓ_max
     instead of n·2o, exploiting the *same* sparsity as the paper's lists
@@ -173,7 +182,14 @@ class Event(NamedTuple):
 
 
 def apply_events(index: ClauseIndex, events: Event) -> ClauseIndex:
-    """Replay a fixed-shape, masked event buffer; each event is O(1)."""
+    """Replay a fixed-shape, masked event buffer; each event is O(1).
+
+    The *sequential oracle*: one ``lax.scan`` iteration per buffer slot,
+    exactly the paper's one-event-at-a-time pointer algebra. The production
+    path is :func:`index_update` (batched replay, no scan) — property tests
+    pin the two equivalent on membership, counts (incl. overflow) and the
+    lists↔pos bijection; this body stays as the semantics reference.
+    """
 
     def body(idx, ev):
         def do(idx):
@@ -187,6 +203,29 @@ def apply_events(index: ClauseIndex, events: Event) -> ClauseIndex:
 
     out, _ = jax.lax.scan(body, index, events)
     return out
+
+
+def index_update(index: ClauseIndex, events: Event,
+                 backend: str = "auto") -> ClauseIndex:
+    """Batched event replay — the production form of :func:`apply_events`.
+
+    Routes the ``index_update`` registry primitive (``kernels/indexed.py``):
+    the whole buffer lands in a handful of vectorised scatters instead of a
+    serialised scan, order-equivalent to sequential replay (identical
+    membership/counts/bijection; intra-list slot order is the one
+    unobservable difference — see the kernel docstring's ordering argument).
+    Shard-local under shard_map exactly like ``apply_events`` was: every
+    operand spec in the primitive's partitioning contract mirrors the
+    indexed engine's ``cache_pspec``.
+    """
+    from repro.kernels.backend import resolve  # lazy: kernels/ is core-free
+
+    fn = resolve("index_update", backend)
+    lists, counts, pos = fn(
+        index.lists, index.counts, index.pos,
+        events.cls, events.clause, events.literal,
+        events.is_insert, events.valid)
+    return ClauseIndex(lists=lists, counts=counts, pos=pos)
 
 
 class EventBuffer(NamedTuple):
@@ -214,18 +253,31 @@ def events_from_transition(
     the TM updates states densely (TPU-friendly), then the index absorbs
     only the boundary crossings — exactly the events the paper's CPU
     implementation applies one by one.
+
+    Selection is two cumsums + one scatter, not a sort: cell i's buffer
+    slot is its rank among changed cells (changed) or ``total`` plus its
+    rank among unchanged ones (padding), which reproduces the stable
+    ``argsort(~changed)[:max_events]`` bit-for-bit — first ``max_events``
+    changed cells in ascending cell order, then ascending unchanged fill —
+    at O(cells) work instead of a full O(cells·log) sort every train step
+    (regression-pinned in tests/test_tm_indexing.py).
     """
     changed = old_include != new_include                 # (m, n, 2o)
     flat = changed.reshape(-1)
     m, n, L = old_include.shape
-    # stable order: first `max_events` changed cells
-    order = jnp.argsort(~flat)                           # changed first
-    sel = order[:max_events]
+    total = jnp.sum(flat, dtype=jnp.int32)
+    # a buffer longer than the cell count degenerates to "all cells",
+    # matching the old ``order[:max_events]`` slice semantics
+    max_events = min(max_events, flat.shape[0])
+    ranks = jnp.cumsum(flat.astype(jnp.int32)) - 1       # rank among changed
+    pad_ranks = total + jnp.cumsum((~flat).astype(jnp.int32)) - 1
+    slot = jnp.where(flat, ranks, pad_ranks)             # bijection on cells
+    sel = jnp.zeros((max_events,), jnp.int32).at[slot].set(
+        jnp.arange(flat.shape[0], dtype=jnp.int32), mode="drop")
     valid = flat[sel]
     cls, rem = jnp.divmod(sel, n * L)
     clause, literal = jnp.divmod(rem, L)
     is_insert = new_include.reshape(-1)[sel]
-    total = jnp.sum(flat, dtype=jnp.int32)
     return EventBuffer(
         events=Event(
             cls=cls.astype(jnp.int32),
@@ -255,27 +307,16 @@ def indexed_partial_scores(
     clause ids — the falsified-union is shard-local and the partial sums add,
     so one psum over the clause axis reproduces the global Eq. 4 scores
     exactly (Σ pol = 0 over all clauses maps Eq. 3 votes onto Eq. 4).
+
+    Body: the matmul form over the position matrix — ``pos != NA`` is the
+    membership mask, so the falsified-union is one contraction (the
+    ``indexed_votes`` XLA reference body; the engine resolves the same
+    primitive per ``cfg.backend`` to run the fused Pallas kernel instead).
+    The old per-sample vmap → (m, 2o, cap) scatter-max is gone.
     """
-    lit = literals_from_input(x)                          # (B, 2o)
-    false_lit = lit == 0                                  # (B, 2o)
-    m, L, cap = index.lists.shape
-    n = pol.shape[0]                                      # clauses this index covers
-    slot_valid = (
-        jnp.arange(cap, dtype=jnp.int32)[None, None, :] < index.counts[..., None]
-    )                                                     # (m, 2o, cap)
+    from repro.kernels import indexed as kindexed  # lazy: mirror backend use
 
-    def per_sample(fl):
-        # contribution mask: literal false AND slot valid
-        contrib = slot_valid & fl[None, :, None]          # (m, 2o, cap)
-        ids = jnp.where(contrib, index.lists, n)          # NA/invalid → drop row
-        falsified = jnp.zeros((m, n), jnp.bool_)
-        falsified = falsified.at[
-            jnp.arange(m)[:, None, None], ids
-        ].max(contrib, mode="drop")
-        return -jnp.einsum("mn,n->m", falsified.astype(jnp.int32),
-                           pol.astype(jnp.int32))
-
-    return jax.vmap(per_sample)(false_lit)
+    return kindexed.indexed_votes_xla(index.pos, literals_from_input(x), pol)
 
 
 def indexed_scores(cfg: TMConfig, index: ClauseIndex, x: jax.Array) -> jax.Array:

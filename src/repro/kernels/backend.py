@@ -36,7 +36,7 @@ contract cannot drift from the code), and ``launch/dryrun.py --tm``
 asserts the lowered collective profile per backend.
 
 Primitives registered at import: ``clause_votes``, ``clause_outputs``,
-``ta_update``.
+``ta_update``, ``indexed_votes``, ``index_update``.
 """
 from __future__ import annotations
 
@@ -49,7 +49,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.kernels import clause_eval, ta_update as ta_update_mod
+from repro.kernels import clause_eval, indexed, ta_update as ta_update_mod
 
 BACKENDS = ("auto", "xla", "pallas", "pallas_interpret")
 
@@ -264,6 +264,49 @@ register_primitive(Primitive(
         out_spec=P(None, None, CLAUSE_AXIS),    # (B, m, n)
         vote_reduce=False,
         clause_padding="caller_sliced",         # outputs feed a 0-pol vote
+    ),
+))
+
+# Matmul-form Eq. 4 over the falsification index's membership mask
+# (pos != NA): shard-local partial vote sums, ONE psum completes them —
+# the same collective profile as clause_votes, just a different cache.
+register_primitive(Primitive(
+    name="indexed_votes",
+    xla=indexed.indexed_votes_xla,
+    pallas=indexed.indexed_votes,
+    partitioning=ClausePartitioning(
+        in_specs=(P(None, CLAUSE_AXIS, None),   # positions (m, n, 2o)
+                  P(None, None),                # literals (B, 2o)
+                  P(CLAUSE_AXIS)),              # polarity (n,)
+        out_spec=P(None, None),                 # (B, m) partial votes
+        vote_reduce=True,
+        clause_padding="zero_polarity",         # sign-0 rows are inert
+    ),
+))
+
+# Batched event replay: every buffer column replicates (each shard diffs
+# its own include slice, so local buffers only name local clauses), the
+# index buffers tile over the clause axis exactly like the engine's
+# cache_pspec, and no collective is needed. Both routes are the same
+# vectorised body — the replay is scatter-bound (see kernels/indexed.py).
+register_primitive(Primitive(
+    name="index_update",
+    xla=indexed.index_update_batched,
+    pallas=indexed.index_update_batched,
+    partitioning=ClausePartitioning(
+        in_specs=(P(None, None, CLAUSE_AXIS),   # lists (m, 2o, cap)
+                  P(None, CLAUSE_AXIS),         # counts (m, 2o)
+                  P(None, CLAUSE_AXIS, None),   # pos (m, n, 2o)
+                  P(None),                      # cls (E,)
+                  P(None),                      # clause (E,)
+                  P(None),                      # literal (E,)
+                  P(None),                      # is_insert (E,)
+                  P(None)),                     # valid (E,)
+        out_spec=(P(None, None, CLAUSE_AXIS),
+                  P(None, CLAUSE_AXIS),
+                  P(None, CLAUSE_AXIS, None)),
+        vote_reduce=False,
+        clause_padding="masked_active",         # invalid events no-op
     ),
 ))
 

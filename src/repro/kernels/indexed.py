@@ -1,0 +1,303 @@
+"""Falsification-index kernels: matmul-form Eq. 4 + batched event replay.
+
+The paper's clause index scores by iterating *false* literals and walking
+their inclusion lists (Eq. 4). The list walk is pointer-chasing — exactly
+what an accelerator hates — but the index carries a second, dense view of
+the same information: the position matrix ``pos (m, n, 2o)`` is ``NA``
+exactly where the clause excludes the literal (``indexing.validate`` pins
+``(pos != NA) == include_mask``). The membership mask therefore *is* the
+include mask, and Eq. 4 collapses to one contraction:
+
+    falsified(b, i, j)  =  Σ_k false_lit(b, k) · member(i, j, k)  >  0
+    votes(b, i)         =  -Σ_j falsified(b, i, j) · pol(j)
+
+No per-sample vmap, no (m, 2o, cap) scatter-max — one MXU/GEMM-friendly
+matmul over the literal axis plus a tiny vote reduction. Shard-locality is
+free: ``pos`` tiles over the clause axis, partial votes add, and one (B, m)
+psum completes the global scores (the ``indexed_votes`` partitioning
+contract in ``kernels/backend.py``).
+
+Two bodies live here:
+
+  * :func:`indexed_votes_xla` — the XLA reference (float32 GEMM over 0/1
+    operands; counts stay < 2²⁴ so the arithmetic is exact, and the result
+    is bit-identical to the integer form).
+  * :func:`indexed_votes` — the fused Pallas body: a clause tile's
+    membership block meets the batch tile's false-literal block on-chip,
+    the falsified bitmask never leaves VMEM, and votes accumulate over the
+    clause-tile grid axis (same tiling idiom as ``kernels/clause_eval.py``).
+
+Maintenance is the third body: :func:`index_update_batched` replays a
+fixed-shape masked event buffer in O(events) *vectorised* work instead of
+``apply_events``'s fully serialised scan-of-cond (one XLA loop iteration
+per buffer slot, thousands per train step). Events are netted per TA cell,
+grouped per inclusion list by a segment-cumsum over two stable sorts of
+the buffer (never over the full state), survivors of deleted entries are
+compacted, and net inserts append — a handful of vectorised scatters per
+buffer. The result is order-equivalent to sequential replay: identical
+``counts`` (exact overflow accounting — every valid event moves its list
+count by ±1, cancelling pairs net 0), identical membership (``pos != NA``),
+and per-list identical *contents as sets* (intra-list order is the one
+thing sequential swap-with-last replay and batched compaction may disagree
+on, and nothing observes it: scoring reads membership only, ``validate``
+checks the lists↔pos bijection, not slot order). There is no Pallas kernel
+body for it — the work is scatter-bound, which Pallas TPU has no edge on —
+so both registry routes run the same batched replay (the primitive exists
+for routing uniformity and its clause-axis partitioning contract).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Mirrors core.indexing.NA — kernels/ stays free of core/ imports; the
+# sentinel is part of the ClauseIndex layout contract (tests pin equality).
+NA = jnp.int32(-1)
+
+BATCH_TILE = 8       # sublane-friendly batch tile
+CLAUSE_TILE = 128    # clauses per grid step
+LANE = 128           # lane width; literal dim padded to a multiple
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# indexed_votes — matmul-form Eq. 4
+# ---------------------------------------------------------------------------
+
+
+def indexed_votes_xla(pos: jax.Array, lit: jax.Array,
+                      pol: jax.Array) -> jax.Array:
+    """(m, n, 2o) position matrix + (B, 2o) literals + (n,) ±1 polarity →
+    (B, m) int32 partial vote sums (Eq. 4: ``-Σ_{j falsified} pol_j``).
+
+    ``pos != NA`` is the membership/include mask, so falsification is one
+    contraction of the false-literal indicators against it. The GEMM runs
+    in float32 (0/1 operands; per-clause hit counts ≤ 2o < 2²⁴ are exact),
+    the vote reduction in int32 — bit-identical to an all-integer einsum,
+    and the clause-sharded partial sums add (one psum completes them).
+    Padding clause rows are all-``NA`` (never falsified) *and* carry sign-0
+    polarity, so they are doubly inert.
+    """
+    m, n, L = pos.shape
+    member = (pos != NA).reshape(m * n, L)                # (m·n, 2o)
+    false_lit = (lit == 0)                                # (B, 2o)
+    hits = jnp.dot(false_lit.astype(jnp.float32),
+                   member.astype(jnp.float32).T)          # (B, m·n)
+    falsified = (hits > 0).reshape(-1, m, n)
+    return -jnp.einsum("bmn,n->bm", falsified.astype(jnp.int32),
+                       pol.astype(jnp.int32))
+
+
+def _indexed_votes_kernel(pos_ref, lit_ref, pol_ref, o_ref):
+    """Grid (B_tiles, m, n_tiles); j = clause-tile index iterates fastest.
+
+    pos_ref: (1, CLAUSE_TILE, L)   int32 — position block (NA = excluded)
+    lit_ref: (BATCH_TILE, L)       int32 — literal truth values
+    pol_ref: (1, CLAUSE_TILE)      int32 — ±1 clause polarity (0 = padding)
+    o_ref:   (BATCH_TILE, 1)       int32 — votes, accumulated over j
+    """
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    member = pos_ref[0] != -1                           # (Ct, L); -1 == NA
+    false_lit = lit_ref[...] == 0                       # (Bt, L)
+    # the falsified bitmask lives entirely on-chip: a clause is falsified
+    # iff any of its member literals is false in the sample
+    hit = member[None, :, :] & false_lit[:, None, :]    # (Bt, Ct, L)
+    falsified = jnp.any(hit, axis=-1)                   # (Bt, Ct)
+    sign = pol_ref[0][None, :]                          # (1, Ct)
+    votes = jnp.sum(jnp.where(falsified, -sign, 0), axis=1, dtype=jnp.int32)
+    o_ref[...] += votes[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def indexed_votes(
+    pos: jax.Array,   # (m, n, 2o) int32 position matrix (NA = excluded)
+    lit: jax.Array,   # (B, 2o) literal truth values
+    pol: jax.Array,   # (n,) int32 ±1 clause polarity
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused Pallas Eq.-4 falsification votes: (B, m) int32.
+
+    Same contract as :func:`indexed_votes_xla`; ``pol`` is the ±1 sign per
+    clause *row of this tensor* — the global polarity single-device, the
+    shard's local slice under shard_map (partial sums completed by the one
+    vote psum). Padding invariants: clause rows beyond n are padded with
+    ``NA`` positions (member-of-nothing → never falsified) and sign 0;
+    literal columns beyond 2o are padded ``NA`` in ``pos`` so the literal
+    pad value never matters.
+    """
+    m, n, L = pos.shape
+    b = lit.shape[0]
+
+    posp = _pad_to(_pad_to(pos.astype(jnp.int32), 2, LANE, value=-1),
+                   1, CLAUSE_TILE, value=-1)
+    litp = _pad_to(_pad_to(lit.astype(jnp.int32), 1, LANE, value=1),
+                   0, BATCH_TILE, value=1)
+    polp = _pad_to(pol.astype(jnp.int32)[None, :], 1, CLAUSE_TILE)
+    n_pad, l_pad = posp.shape[1], posp.shape[2]
+    b_pad = litp.shape[0]
+
+    grid = (b_pad // BATCH_TILE, m, n_pad // CLAUSE_TILE)
+    out = pl.pallas_call(
+        _indexed_votes_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, CLAUSE_TILE, l_pad), lambda bb, i, j: (i, j, 0)),
+            pl.BlockSpec((BATCH_TILE, l_pad), lambda bb, i, j: (bb, 0)),
+            pl.BlockSpec((1, CLAUSE_TILE), lambda bb, i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BATCH_TILE, 1), lambda bb, i, j: (bb, i)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, m), jnp.int32),
+        interpret=interpret,
+    )(posp, litp, polp)
+    return out[:b]
+
+
+# ---------------------------------------------------------------------------
+# index_update — batched event replay (O(events), vectorised)
+# ---------------------------------------------------------------------------
+
+
+def _segment_layout(keys: jax.Array):
+    """Stable-sort segment helpers for a (E,) int32 key vector.
+
+    Returns ``(order, sorted_keys, start, last, first_idx)`` where ``order``
+    is the stable sort permutation (equal keys keep buffer order), ``start``
+    / ``last`` flag segment boundaries in sorted order, and ``first_idx[e]``
+    is the sorted position of e's segment head (the cummax trick — no
+    segment ids materialised, no data-sized temporaries).
+    """
+    order = jnp.argsort(keys)                             # stable
+    sk = keys[order]
+    idx = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    start = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    last = jnp.concatenate([sk[:-1] != sk[1:], jnp.ones((1,), bool)])
+    first_idx = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(start, idx, 0))
+    return order, sk, start, last, first_idx
+
+
+def index_update_batched(
+    lists: jax.Array,      # (m, 2o, cap) int32 clause ids; NA beyond counts
+    counts: jax.Array,     # (m, 2o) int32
+    pos: jax.Array,        # (m, n, 2o) int32; NA where excluded
+    cls: jax.Array,        # (E,) int32 event class
+    clause: jax.Array,     # (E,) int32 event clause
+    literal: jax.Array,    # (E,) int32 event literal
+    is_insert: jax.Array,  # (E,) bool
+    valid: jax.Array,      # (E,) bool — fixed-shape buffer mask
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Replay a masked event buffer in one vectorised pass (no scan).
+
+    Precondition (the ``apply_events`` contract): valid events are genuine
+    include-boundary crossings in buffer order — an insert lands on a cell
+    that is currently excluded, a delete on one currently included (so
+    repeated events on one cell strictly alternate). Under it the batched
+    result is order-equivalent to sequential replay: identical ``counts``
+    (±1 per valid event; insert/delete pairs on a cell cancel exactly, so
+    overflow accounting matches to the unit), identical membership
+    (``pos != NA``), per-list identical contents as sets with a consistent
+    lists↔pos bijection. Only intra-list slot *order* may differ (batched
+    compaction preserves relative order and appends net inserts in buffer
+    order; sequential swap-with-last may permute) — unobservable to
+    scoring, ``validate``, and work accounting. Capacity overflow drops the
+    overflowing ids (``mode='drop'``) while counts keep the exact
+    sequential value — the config error stays observable via ``validate``.
+
+    ``interpret`` is accepted for kernel-backend routing uniformity and
+    ignored: the replay is scatter-bound, so both registry routes run this
+    same body (see the module docstring).
+    """
+    del interpret
+    m, L, cap = lists.shape
+    n = pos.shape[1]
+    E = cls.shape[0]
+    idx = jnp.arange(E, dtype=jnp.int32)
+    v = valid.astype(bool)
+    ins = is_insert.astype(bool)
+
+    # -- net events per TA cell: alternation means an even run is a no-op
+    # and an odd run's last event carries the whole run's effect
+    cell = (cls * n + clause) * L + literal
+    cell_big = jnp.int32(m * n * L)                        # invalid → own tail
+    order, _, _, last, first_idx = _segment_layout(
+        jnp.where(v, cell, cell_big))
+    occ = idx - first_idx                                  # rank within run
+    net_sorted = v[order] & last & (occ % 2 == 0)          # odd run length
+    effective = jnp.zeros((E,), bool).at[order].set(net_sorted)
+    eff_ins = effective & ins
+    eff_del = effective & ~ins
+
+    # -- per-list aggregates (dense (m, 2o) temporaries — tiny)
+    n_del = jnp.zeros((m, L), jnp.int32).at[
+        jnp.where(eff_del, cls, m), literal].add(1, mode="drop")
+    n_ins = jnp.zeros((m, L), jnp.int32).at[
+        jnp.where(eff_ins, cls, m), literal].add(1, mode="drop")
+    new_counts = counts + n_ins - n_del
+
+    # -- membership: net deletes leave the index now; inserts land after
+    # their append slots are known
+    pos2 = pos.at[jnp.where(eff_del, cls, m), clause, literal].set(
+        NA, mode="drop")
+
+    # -- group effective events per inclusion list (c, k): the segment head
+    # is the list's representative (rebuilds the row once), and each net
+    # insert's rank among its list's inserts fixes its append slot
+    glist = cls * L + literal
+    glist_big = jnp.int32(m * L)
+    order2, _, start2, _, first_idx2 = _segment_layout(
+        jnp.where(effective, glist, glist_big))
+    rep_sorted = start2 & effective[order2]
+    ins_ind = eff_ins[order2].astype(jnp.int32)
+    pre = jnp.cumsum(ins_ind) - ins_ind                    # inserts before me
+    rank_sorted = pre - pre[first_idx2]                    # …within my list
+    rep = jnp.zeros((E,), bool).at[order2].set(rep_sorted)
+    ins_rank = jnp.zeros((E,), jnp.int32).at[order2].set(rank_sorted)
+
+    # -- compact survivors of every touched list (one row per representative)
+    rows = lists[cls, literal]                             # (E, cap)
+    old_cnt = counts[cls, literal]                         # (E,)
+    slot = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    safe_ids = jnp.where(rows >= 0, rows, 0)
+    still = pos2[cls[:, None], safe_ids, literal[:, None]] != NA
+    surv = (slot < old_cnt[:, None]) & (rows >= 0) & still # (E, cap)
+    new_slot = jnp.cumsum(surv.astype(jnp.int32), axis=1) - 1
+    new_rows = jnp.full((E, cap), NA, jnp.int32).at[
+        idx[:, None], jnp.where(surv, new_slot, cap)].set(
+        jnp.where(surv, rows, NA), mode="drop")
+
+    # -- scatter everything back: representative rows, survivor positions,
+    # then net-insert appends (scatters touch disjoint cells by netting)
+    rep_c = jnp.where(rep, cls, m)                         # OOB → drop
+    new_lists = lists.at[rep_c, literal].set(new_rows, mode="drop")
+    wc = jnp.where(surv & rep[:, None], cls[:, None], m)
+    pos3 = pos2.at[
+        wc, safe_ids, jnp.broadcast_to(literal[:, None], (E, cap))].set(
+        new_slot, mode="drop")
+
+    base = old_cnt - n_del[cls, literal]                   # survivors per list
+    app_slot = base + ins_rank
+    ins_c = jnp.where(eff_ins, cls, m)
+    new_lists = new_lists.at[ins_c, literal, app_slot].set(
+        clause, mode="drop")
+    pos3 = pos3.at[ins_c, clause, literal].set(app_slot, mode="drop")
+    return new_lists, new_counts, pos3

@@ -184,6 +184,52 @@ def run_tm_checks(*, data: int = 2, model: int = 4, n_clauses: int = 256,
                 f"with one vote all-reduce, got pallas_call={kernel_routed}, "
                 f"{coll.by_kind} (count={coll.count})")
 
+    # -- kernel backend routes for the indexed engine -----------------------
+    # Matmul-form Eq. 4 (indexed_votes) must route exactly like clause_votes:
+    # pallas_call in the jaxpr ⇔ a pallas backend, one vote all-reduce either
+    # way. The train leg covers the second new primitive: index maintenance
+    # (index_update) is the same scatter-bound batched-replay body on both
+    # routes, and the step's collective profile must stay all-reduce-only
+    # regardless of backend.
+    icache = bundle.caches[get_engine("indexed").cache_key]
+    btxs = jnp.zeros((train_batch, cfg.n_features), jnp.uint8)
+    btys = jnp.zeros((train_batch,), jnp.int32)
+    btmask = jnp.ones((train_batch,), bool)
+    bkd = jax.random.key_data(jax.random.key(0))
+    for backend in ("xla", "pallas_interpret"):
+        cfg_b = dataclasses.replace(cfg, backend=backend)
+        s = make_sharded_scores(cfg_b, mesh, engine="indexed")
+        jaxpr = str(jax.make_jaxpr(s.jitted)(icache, s.pol, xs))
+        kernel_routed = "pallas_call" in jaxpr
+        coll = hlo_mod.collective_stats(
+            s.jitted.lower(icache, s.pol, xs).compile().as_text())
+        one_ar = coll.count == 1 and set(coll.by_kind) == {"all-reduce"}
+        want_kernel = backend != "xla"
+        tstep = make_sharded_train_step(cfg_b, mesh, parallel=False,
+                                        max_events=1024)
+        tcoll = hlo_mod.collective_stats(
+            tstep.jitted.lower(bundle.state, bundle.caches, tstep.pol, btxs,
+                               btys, bkd, btmask,
+                               jnp.zeros((), jnp.int32)).compile().as_text())
+        update_ok = set(tcoll.by_kind) <= {"all-reduce"}
+        ok = one_ar and kernel_routed == want_kernel and update_ok
+        record["backend_routes"][f"indexed_{backend}"] = {
+            "pallas_call_in_jaxpr": kernel_routed,
+            "collective_count": coll.count, "by_kind": coll.by_kind,
+            "one_vote_all_reduce": one_ar,
+            "train_step_all_reduce_only": update_ok,
+            "train_step_by_kind": tcoll.by_kind}
+        print(f"[tm] scores/indexed[{backend}]: pallas_call={kernel_routed} "
+              f"collectives={coll.by_kind} count={coll.count} "
+              f"train={tcoll.by_kind} {'OK' if ok else 'FAIL'}", flush=True)
+        if not ok:
+            record["failures"].append(
+                f"scores/indexed[{backend}]: expected "
+                f"{'the Pallas kernel' if want_kernel else 'the XLA body'} "
+                f"with one vote all-reduce and an all-reduce-only train "
+                f"step, got pallas_call={kernel_routed}, {coll.by_kind} "
+                f"(count={coll.count}), train={tcoll.by_kind}")
+
     for parallel in (False, True):
         step = make_sharded_train_step(cfg, mesh, parallel=parallel,
                                        max_events=1024)

@@ -113,6 +113,26 @@ def test_partitioning_contract_matches_sharded_wiring():
     assert upd.in_specs[0] == upd.out_spec == P(CLAUSE_AXIS, None)
     assert not upd.vote_reduce  # feedback is clause-local: no collective
 
+    idx_pspec = get_engine("indexed").cache_pspec(CFG)
+    iv = kbackend.get_primitive("indexed_votes").partitioning
+    # matmul-form Eq. 4 reads the position matrix with the engine's own
+    # cache spec; votes are partial sums under the same single psum as
+    # clause_votes, padding rows inert through sign-0 polarity
+    assert iv.in_specs == (idx_pspec.pos, P(None, None), P(CLAUSE_AXIS))
+    assert iv.out_spec == P(None, None) and iv.vote_reduce
+    assert iv.clause_padding == "zero_polarity"
+
+    iu = kbackend.get_primitive("index_update").partitioning
+    # batched replay: index operands/results carry the engine cache spec
+    # verbatim, event columns replicate (each shard diffs its own slice),
+    # and no collective fires — maintenance is clause-local
+    assert iu.in_specs[:3] == (idx_pspec.lists, idx_pspec.counts,
+                               idx_pspec.pos)
+    assert iu.in_specs[3:] == (P(None),) * 5
+    assert iu.out_spec == (idx_pspec.lists, idx_pspec.counts, idx_pspec.pos)
+    assert not iu.vote_reduce
+    assert iu.clause_padding == "masked_active"
+
 
 # ---------------------------------------------------------------------------
 # Primitive-level parity: every registered primitive, Pallas == XLA
@@ -142,6 +162,32 @@ def _primitive_case(name, seed):
             jnp.asarray(rng.integers(0, 2, n), bool),
             jnp.asarray(rng.uniform(size=(n, L)), jnp.float32),
         ), {"n_states": 50, "s": 3.7, "boost_true_positive": bool(seed % 2)}
+    if name == "indexed_votes":
+        from repro.core.types import literals_from_input
+        # votes read membership (pos != NA) only — slot values are free
+        pos = jnp.where(jnp.asarray(include), 7, -1).astype(jnp.int32)
+        pol = jnp.asarray(rng.choice([-1, 1], n), jnp.int32)
+        return (pos, literals_from_input(x), pol), {}
+    if name == "index_update":
+        from repro.core import indexing
+        from repro.core.types import include_mask
+        cfg = dataclasses.replace(
+            CFG, n_clauses=n, n_features=o, index_capacity=n)
+        ta = np.where(include, cfg.n_states + 1, cfg.n_states)
+        state = TMState(ta_state=jnp.asarray(ta, jnp.int16))
+        idx = indexing.build_index(cfg, state, n)
+        inc = np.asarray(include_mask(cfg, state))
+        # 12 distinct boundary crossings (direction from the current mask:
+        # insert where excluded, delete where included) + an invalid tail
+        cells = rng.choice(m * n * 2 * o, size=12, replace=False)
+        ci, rem = np.divmod(cells, n * 2 * o)
+        cj, ck = np.divmod(rem, 2 * o)
+        valid = np.ones(12, bool)
+        valid[-3:] = False
+        return (idx.lists, idx.counts, idx.pos,
+                jnp.asarray(ci, jnp.int32), jnp.asarray(cj, jnp.int32),
+                jnp.asarray(ck, jnp.int32),
+                jnp.asarray(~inc[ci, cj, ck]), jnp.asarray(valid)), {}
     raise NotImplementedError(
         f"primitive {name!r} registered without a parity case — add one")
 
@@ -152,7 +198,11 @@ def test_primitive_pallas_matches_xla(name, seed):
     args, kwargs = _primitive_case(name, seed)
     want = kbackend.resolve(name, "xla")(*args, **kwargs)
     got = kbackend.resolve(name, "pallas_interpret")(*args, **kwargs)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    want_leaves = jax.tree_util.tree_leaves(want)
+    got_leaves = jax.tree_util.tree_leaves(got)
+    assert len(got_leaves) == len(want_leaves)  # e.g. index_update's 3-tuple
+    for g, w in zip(got_leaves, want_leaves):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
 def test_every_primitive_has_a_case():

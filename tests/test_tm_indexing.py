@@ -14,7 +14,8 @@ from repro.core import (
     TMConfig, TMState, apply_events, build_index, compact,
     compact_apply_events, compact_eval, compact_scores, delete,
     dense_clause_outputs, empty_index, events_from_transition,
-    indexed_scores, indexed_work, insert, init_tm, scores, validate,
+    index_update, indexed_scores, indexed_work, insert, init_tm, scores,
+    validate,
 )
 from repro.core import ref
 from repro.core.indexing import Event
@@ -246,6 +247,151 @@ def test_indexed_work_metric():
     counts = np.asarray(idx.counts)
     want = counts[:, :CFG.n_features].sum()  # false literals = first o
     assert w == want
+
+
+# ---------------------------------------------------------------------------
+# Batched replay (index_update) ≡ sequential oracle ≡ fresh build
+# ---------------------------------------------------------------------------
+
+
+def _assert_index_set_equal(got, want):
+    """Set-level index equality: counts and membership bit-exact, each list's
+    live prefix equal as a *set* (intra-list slot order is the one thing
+    sequential swap-with-last and batched compaction may disagree on, and
+    nothing observes it), NA padding beyond counts."""
+    cnts = np.asarray(want.counts)
+    np.testing.assert_array_equal(np.asarray(got.counts), cnts)
+    np.testing.assert_array_equal(np.asarray(got.pos) != -1,
+                                  np.asarray(want.pos) != -1)
+    gl, wl = np.asarray(got.lists), np.asarray(want.lists)
+    m, L, cap = gl.shape
+    for i in range(m):
+        for k in range(L):
+            c = cnts[i, k]
+            assert sorted(gl[i, k, :c]) == sorted(wl[i, k, :c]), (i, k)
+            assert (gl[i, k, c:] == -1).all(), (i, k)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_index_update_equals_sequential_and_rebuild(seed):
+    """Real transition buffers (masked tails included): batched replay ≡
+    scan-of-cond replay ≡ fresh build, and the result validates."""
+    state0 = random_state(CFG, seed)
+    state1 = random_state(CFG, 50 + seed)
+    old_inc = include_mask(CFG, state0)
+    new_inc = include_mask(CFG, state1)
+    n_changed = int(np.asarray(old_inc != new_inc).sum())
+    buf = events_from_transition(old_inc, new_inc, max_events=n_changed + 7)
+    idx0 = build_index(CFG, state0, CAP)
+    seq = apply_events(idx0, buf.events)
+    bat = index_update(idx0, buf.events)
+    _assert_index_set_equal(bat, seq)
+    _assert_index_set_equal(bat, build_index(CFG, state1, CAP))
+    for name, ok in validate(CFG, state1, bat).items():
+        assert bool(ok), name
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_index_update_same_cell_and_same_list_multiples(seed):
+    """Adversarial buffers: repeated events on the same (i, j, k) cell
+    (strictly alternating — the apply_events precondition), many events on
+    the same list, plus a garbage invalid tail that must be ignored."""
+    rng = np.random.default_rng(seed)
+    state0 = random_state(CFG, seed)
+    cur = np.asarray(include_mask(CFG, state0)).copy()
+    idx0 = build_index(CFG, state0, CAP)
+    # concentrate on two literals so lists absorb many events each, and
+    # revisit cells freely: each revisit flips direction (delete-then-insert
+    # and insert-then-delete of the same cell both occur)
+    ks = rng.choice(CFG.n_literals, size=2, replace=False)
+    rows = []
+    for _ in range(28):
+        i = int(rng.integers(CFG.n_classes))
+        j = int(rng.integers(CFG.n_clauses))
+        k = int(ks[rng.integers(2)])
+        rows.append((i, j, k, not cur[i, j, k], True))
+        cur[i, j, k] = not cur[i, j, k]
+    for _ in range(4):  # invalid tail: arbitrary fields, must be no-ops
+        rows.append((int(rng.integers(CFG.n_classes)),
+                     int(rng.integers(CFG.n_clauses)),
+                     int(rng.integers(CFG.n_literals)),
+                     bool(rng.integers(2)), False))
+    ev = Event(
+        cls=jnp.asarray([r[0] for r in rows], jnp.int32),
+        clause=jnp.asarray([r[1] for r in rows], jnp.int32),
+        literal=jnp.asarray([r[2] for r in rows], jnp.int32),
+        is_insert=jnp.asarray([r[3] for r in rows]),
+        valid=jnp.asarray([r[4] for r in rows]))
+    seq = apply_events(idx0, ev)
+    bat = index_update(idx0, ev)
+    _assert_index_set_equal(bat, seq)
+    ta = np.where(cur, CFG.n_states + 1, CFG.n_states)
+    state1 = TMState(ta_state=jnp.asarray(ta, jnp.int16))
+    _assert_index_set_equal(bat, build_index(CFG, state1, CAP))
+    for name, ok in validate(CFG, state1, bat).items():
+        assert bool(ok), name
+
+
+def test_index_update_overflow_counts_match_sequential():
+    """Capacity overflow: counts keep the exact sequential value (±1 per
+    valid event — the config error stays observable via validate), and the
+    in-capacity prefix matches the sequential survivors."""
+    cap = 2
+    idx0 = empty_index(CFG, cap)
+    ev = Event(cls=jnp.zeros(4, jnp.int32),
+               clause=jnp.arange(4, dtype=jnp.int32),
+               literal=jnp.full(4, 3, jnp.int32),
+               is_insert=jnp.ones(4, bool), valid=jnp.ones(4, bool))
+    seq = apply_events(idx0, ev)
+    bat = index_update(idx0, ev)
+    np.testing.assert_array_equal(np.asarray(bat.counts),
+                                  np.asarray(seq.counts))
+    assert int(bat.counts[0, 3]) == 4 > cap  # overflow accounted, not hidden
+    np.testing.assert_array_equal(np.asarray(bat.pos) != -1,
+                                  np.asarray(seq.pos) != -1)
+    np.testing.assert_array_equal(np.asarray(bat.lists[0, 3]),
+                                  np.asarray(seq.lists[0, 3]))  # [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# events_from_transition: cumsum selection ≡ the old stable argsort
+# ---------------------------------------------------------------------------
+
+
+def _events_argsort_reference(old_inc, new_inc, max_events):
+    """The pre-optimisation selection, verbatim: stable argsort of the
+    changed mask, first max_events cells (regression oracle)."""
+    flat = (np.asarray(old_inc) != np.asarray(new_inc)).reshape(-1)
+    order = np.argsort(~flat, kind="stable")
+    sel = order[:max_events]
+    m, n, L = np.asarray(old_inc).shape
+    cls, rem = np.divmod(sel, n * L)
+    clause, literal = np.divmod(rem, L)
+    overflow = max(int(flat.sum()) - max_events, 0)
+    return (cls, clause, literal, np.asarray(new_inc).reshape(-1)[sel],
+            flat[sel], overflow)
+
+
+@pytest.mark.parametrize("seed,max_events", [
+    (0, 64),        # room to spare: changed cells + unchanged fill
+    (1, 16),        # tight
+    (2, 5),         # overflow: more changed cells than buffer slots
+    (3, 10_000),    # buffer larger than the cell count (degenerates to all)
+])
+def test_events_from_transition_matches_argsort_reference(seed, max_events):
+    state0 = random_state(CFG, seed)
+    state1 = random_state(CFG, 70 + seed)
+    old_inc = include_mask(CFG, state0)
+    new_inc = include_mask(CFG, state1)
+    buf = events_from_transition(old_inc, new_inc, max_events)
+    cls, clause, literal, is_insert, valid, overflow = \
+        _events_argsort_reference(old_inc, new_inc, max_events)
+    np.testing.assert_array_equal(np.asarray(buf.events.cls), cls)
+    np.testing.assert_array_equal(np.asarray(buf.events.clause), clause)
+    np.testing.assert_array_equal(np.asarray(buf.events.literal), literal)
+    np.testing.assert_array_equal(np.asarray(buf.events.is_insert), is_insert)
+    np.testing.assert_array_equal(np.asarray(buf.events.valid), valid)
+    assert int(buf.overflow) == overflow
 
 
 def test_index_sync_through_learning():
